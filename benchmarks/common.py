@@ -1,0 +1,67 @@
+"""Shared benchmark utilities: instance/brute-force caching, timing, CSV.
+
+Scale control: REPRO_BENCH_SCALE = quick | standard | paper.
+  quick     ~2 min total  (CI / smoke: 1 instance, 4 runs, 300 iters)
+  standard  ~20 min       (3 instances, 8 runs, 600 iters)
+  paper     hours         (the paper's full protocol: 10 instances, 25 runs,
+                           1176 iterations, RS at 100 runs)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import brute_force, shrunk_vgg_instance
+from repro.core.bruteforce import exact_solutions
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+SCALES = {
+    "quick": dict(instances=1, runs=4, rs_runs=8, iters=300),
+    "standard": dict(instances=3, runs=8, rs_runs=16, iters=600),
+    "paper": dict(instances=10, runs=25, rs_runs=100, iters=1152),
+}
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments")
+
+
+def params():
+    return SCALES[SCALE]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+
+_INSTANCE_CACHE = os.path.join(OUT_DIR, "instances")
+
+
+def instance_with_exact(idx: int, K: int = 3):
+    """(W, best_cost, second_cost, exact_solutions) — brute force cached on
+    disk (the 2^24 search takes ~40 s vectorised vs the paper's 5553 s)."""
+    os.makedirs(_INSTANCE_CACHE, exist_ok=True)
+    path = os.path.join(_INSTANCE_CACHE, f"inst{idx}_K{K}.npz")
+    W = shrunk_vgg_instance(idx)
+    if os.path.exists(path):
+        z = np.load(path)
+        return W, float(z["best"]), float(z["second"]), z["sols"]
+    with Timer() as t:
+        res = brute_force(np.asarray(W), K=K, chunk=1 << 16)
+    sols = exact_solutions(res)
+    np.savez(path, best=res.best_cost, second=res.second_cost, sols=sols,
+             seconds=t.s)
+    return W, res.best_cost, res.second_cost, sols

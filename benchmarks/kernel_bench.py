@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU), so wall-clock here measures (a) the jnp reference
+paths — meaningful *relative* numbers — and (b) the model-level effect of
+compression: bytes moved per matmul, the quantity the bitlinear kernel is
+designed around (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, emit
+from repro.core import quantized
+from repro.core.compress import compress_matrix
+from repro.configs.base import CompressionConfig
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_compressed_matmul() -> None:
+    d_in, d_out, T = 2048, 2048, 256
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (d_in, d_out)) / np.sqrt(d_in)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (T, d_in))
+    ccfg = CompressionConfig(tile_n=32, tile_d=128, rank_ratio=0.125, min_size=1)
+    w, err = compress_matrix(W, ccfg, method="greedy")
+
+    dense = jax.jit(lambda x: x @ W)
+    comp = jax.jit(lambda x: quantized.apply_compressed(x, w))
+    us_dense = _time(dense, x)
+    us_comp = _time(comp, x)
+
+    dense_bytes = W.size * 2                       # bf16 weight read
+    comp_bytes = quantized.compressed_num_bytes(w)
+    emit("kernel_dense_matmul_2048", us_dense, f"weight_bytes={dense_bytes}")
+    emit(
+        "kernel_compressed_matmul_2048", us_comp,
+        f"weight_bytes={comp_bytes};bytes_ratio=x{dense_bytes/comp_bytes:.1f};rel_err={err:.3f}",
+    )
+
+
+def bench_flash_ref() -> None:
+    B, H, KV, S, hd = 1, 8, 2, 2048, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, 0))
+    emit("kernel_attention_ref_2k", _time(f, q, k, v, iters=5),
+         f"flops={4*B*H*S*S*hd:.2e}")
+
+
+def bench_sa_throughput() -> None:
+    """Ising solves/second in the batched pure-JAX SA (the BBO inner loop)."""
+    from repro.core import ising
+
+    n, reads, sweeps = 24, 10, 64
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (n,))
+    Bm = jax.random.normal(jax.random.fold_in(key, 1), (n, n)) * 0.1
+    Bm = (Bm + Bm.T) / 2
+    Bm = Bm - jnp.diag(jnp.diag(Bm))
+    f = jax.jit(lambda k: ising.solve_sa(k, h, Bm, num_sweeps=sweeps, num_reads=reads))
+    us = _time(f, key, iters=10)
+    emit("kernel_sa_solve_n24", us,
+         f"reads={reads};sweeps={sweeps};spin_updates_per_s={reads*sweeps*n/(us*1e-6):.2e}")
+
+
+def run_all() -> None:
+    bench_compressed_matmul()
+    bench_flash_ref()
+    bench_sa_throughput()

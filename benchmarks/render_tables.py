@@ -1,0 +1,53 @@
+"""Render EXPERIMENTS.md tables from experiments/ JSON artefacts.
+
+    PYTHONPATH=src python -m benchmarks.render_tables
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        rows.append(r)
+    out = [
+        "| arch | shape | mesh | GiB/dev | fits 16 GiB | HLO flops/dev | coll bytes/dev |",
+        "|---|---|---|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        mesh = "2×16×16" if "pod=2" in r["mesh"] else "16×16"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | "
+            f"{r['memory']['per_device_total']/2**30:.2f} | "
+            f"{'✓' if r['fits_hbm'] else '✗'} | {r['cost']['flops']:.2e} | "
+            f"{r['collectives']['total']:.2e} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    out = [
+        "| arch | shape | compute_s | memory_s (HLO) | memory_s (analytic) | collective_s | dominant | useful % |",
+        "|---|---|---:|---:|---:|---:|---|---:|",
+    ]
+    for f in sorted(glob.glob("experiments/roofline/*.json")):
+        r = json.load(open(f))
+        tag = " (causal-skip)" if r.get("causal_skip") else ""
+        out.append(
+            f"| {r['arch']}{tag} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r.get('memory_s_analytic', float('nan')):.4f} | "
+            f"{r['collective_s']:.4f} | {r.get('dominant_analytic', r['dominant'])} | "
+            f"{r.get('useful_fraction', 0)*100:.1f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

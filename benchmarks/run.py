@@ -1,0 +1,68 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV rows, one section per paper
+table/figure + the framework benchmarks.  Scale via REPRO_BENCH_SCALE
+(quick | standard | paper; see benchmarks/common.py).
+
+The roofline sweep needs 512 virtual devices (device count locks at first
+jax init), so it runs in this process ONLY when invoked as
+``python -m benchmarks.roofline``; here we summarise its JSON artefacts plus
+the dry-run sweep's (run those first — see README Reproduce section).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def summarize_dryrun() -> None:
+    from benchmarks.common import emit
+
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        emit("dryrun_summary", 0.0, "missing;run=python -m repro.launch.dryrun --all")
+        return
+    fits = over = 0
+    for f in files:
+        r = json.load(open(f))
+        if r["fits_hbm"]:
+            fits += 1
+        else:
+            over += 1
+    emit("dryrun_summary", 0.0, f"cells={len(files)};fits_16GiB={fits};over={over}")
+
+
+def summarize_roofline() -> None:
+    from benchmarks.common import emit
+
+    files = sorted(glob.glob("experiments/roofline/*.json"))
+    if not files:
+        emit("roofline_summary", 0.0, "missing;run=python -m benchmarks.roofline --all")
+        return
+    for f in files:
+        r = json.load(open(f))
+        tag = "skip" if r.get("causal_skip") else "base"
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}_{tag}",
+            r["bound_s"] * 1e6,
+            f"dominant={r['dominant']};compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};collective_ms={r['collective_s']*1e3:.2f};"
+            f"useful={r.get('useful_fraction', 0)*100:.1f}%",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import compress_scale, kernel_bench, paper_experiments
+
+    paper_experiments.run_all()
+    kernel_bench.run_all()
+    compress_scale.run_all()
+    summarize_dryrun()
+    summarize_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Train-compress-serve: the paper's technique as a deployment pipeline.
+
+  1. train a tiny LM for a few steps (so weights have learned structure),
+  2. compress its linear layers by tile-wise integer decomposition
+     (greedy / alternating / BBO back-ends — the paper's algorithms),
+  3. serve both models and compare memory footprint + agreement.
+
+    PYTHONPATH=src python examples/compress_then_serve.py [--method bbo]
+"""
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.configs.base import CompressionConfig, ParallelConfig, ShapeConfig
+from repro.core.compress import compress_params
+from repro.data.pipeline import make_pipeline
+from repro.distributed.sharding import activation_rules
+from repro.launch.mesh import make_mesh
+from repro.optim import warmup_cosine
+from repro.serving.engine import Engine
+from repro.training import init_train_state, make_train_step, state_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", default="alternating",
+                    choices=["greedy", "alternating", "bbo"])
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--rank-ratio", type=float, default=0.5)
+    args = ap.parse_args()
+
+    cfg = reduced_for_smoke(get_config("mistral-nemo-12b"))
+    cfg = dataclasses.replace(cfg, d_model=128, d_ff=256, num_layers=4,
+                              vocab_size=512, dtype="float32")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pcfg = ParallelConfig(mesh_shape=(1, 1), mesh_axes=("data", "model"))
+    shape = ShapeConfig("s", "train", 128, 8)
+
+    # 1. short training run
+    state = init_train_state(jax.random.PRNGKey(0), cfg, pcfg, mesh)
+    sh = state_shardings(cfg, pcfg, mesh)
+    fn = make_train_step(cfg, pcfg, warmup_cosine(3e-3, 10, args.train_steps))
+    pipe = make_pipeline(cfg, shape, mesh)
+    with jax.set_mesh(mesh), activation_rules(pcfg, mesh):
+        jstep = jax.jit(fn, in_shardings=(sh, None), out_shardings=(sh, None),
+                        donate_argnums=0)
+        for i in range(args.train_steps):
+            state, m = jstep(state, pipe.batch_at(i))
+    print(f"trained {args.train_steps} steps, loss {float(m['loss']):.3f}")
+
+    # 2. compress
+    ccfg = CompressionConfig(
+        enabled=True, tile_n=8 if args.method == "bbo" else 16,
+        tile_d=64, rank_ratio=args.rank_ratio, min_size=8192,
+        optimizer=args.method, bbo_iters=48,
+    )
+    cvals, report = compress_params(state.params, cfg, ccfg)
+    print(f"compressed {len(report.compressed)} tensors with "
+          f"'{args.method}': ratio x{report.total_ratio:.2f}")
+    for pth, ob, nb, err in report.compressed[:6]:
+        print(f"  {pth:40s} rel_err={err:.3f}")
+
+    # 3. serve both
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (4, 12), 0, cfg.vocab_size)
+    dense = Engine(cfg, state.params, max_len=44, batch=4)
+    comp = Engine(cfg, cvals, max_len=44, batch=4)
+    out_d = dense.generate(prompts, steps=24)
+    out_c = comp.generate(prompts, steps=24)
+    agree = float(jnp.mean((out_d[:, 12:] == out_c[:, 12:]).astype(jnp.float32)))
+    print(f"greedy-token agreement dense vs compressed: {agree*100:.1f}% "
+          f"(rank_ratio={args.rank_ratio}; raise it for higher fidelity)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Checkpoint lifecycle: async save, keep-last-k GC, auto-resume."""
+
+from __future__ import annotations
+
+import concurrent.futures
+import os
+import shutil
+
+import jax
+
+from repro.checkpoint import checkpointer
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._pool = (
+            concurrent.futures.ThreadPoolExecutor(max_workers=1) if async_save else None
+        )
+        self._pending = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree) -> None:
+        """Async by default: device->host transfer happens now (so training
+        may mutate buffers), file IO on the worker thread."""
+        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+        self.wait()
+        if self._pool is None:
+            checkpointer.save(self.directory, step, host_tree)
+            self._gc()
+        else:
+            self._pending = self._pool.submit(self._save_and_gc, step, host_tree)
+
+    def _save_and_gc(self, step, host_tree):
+        checkpointer.save(self.directory, step, host_tree)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # -- restore ------------------------------------------------------------
+    def latest_step(self):
+        return checkpointer.latest_step(self.directory)
+
+    def restore_latest(self, like_tree, shardings=None):
+        """Returns (step, tree) or (None, None) when no checkpoint exists."""
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, checkpointer.restore(self.directory, step, like_tree, shardings)
+
+    # -- GC -----------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = checkpointer.available_steps(self.directory)
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+        # remove stale .tmp dirs from crashed saves
+        for d in os.listdir(self.directory):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)

@@ -1,0 +1,104 @@
+"""Brute-force exact search over all 2^(N*K) binary matrices.
+
+The paper uses brute force (5553 s) to obtain the exact and second-best
+solutions that calibrate the residual-error plots.  We vectorise it: the
+Gram-form objective evaluates a chunk of candidates with one batched eigh,
+which makes the n = 24 search take seconds-to-minutes instead of hours
+(recorded as a beyond-paper win in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decomposition, symmetry
+
+__all__ = ["BruteForceResult", "brute_force", "exact_solutions"]
+
+
+class BruteForceResult(NamedTuple):
+    best_cost: float          # L(M*) — squared Frobenius residual
+    second_cost: float        # best cost strictly worse than best_cost
+    best_norm: float          # ||f(M*)||_2
+    solutions: np.ndarray     # (num_exact, N, K) all minimisers (the orbit)
+    costs_topk: np.ndarray    # (topk,) smallest distinct costs found
+
+
+def _codes_to_pm1(codes: jax.Array, n: int, dtype) -> jax.Array:
+    bits = (codes[:, None] >> jnp.arange(n, dtype=codes.dtype)[None, :]) & 1
+    return (2 * bits - 1).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "N", "K", "chunk"))
+def _chunk_costs(start: jax.Array, W: jax.Array, n: int, N: int, K: int, chunk: int):
+    codes = start + jnp.arange(chunk, dtype=jnp.int32)
+    X = _codes_to_pm1(codes, n, W.dtype)
+    return jax.vmap(lambda x: decomposition.objective_from_x(x, W, K))(X)
+
+
+def brute_force(
+    W: np.ndarray,
+    K: int,
+    chunk: int = 1 << 14,
+    topk: int = 64,
+    rtol: float = 1e-5,
+) -> BruteForceResult:
+    """Exhaustive search; returns the optimum, the second-best *distinct*
+    cost (paper's grey line) and every minimiser (the symmetry orbit)."""
+    W = jnp.asarray(W)
+    N, D = W.shape
+    n = N * K
+    assert n <= 30, "brute force only feasible (and int32-safe) for n <= 30"
+    total = 1 << n
+    assert total % chunk == 0, "chunk must divide 2^n"
+
+    best_costs = None
+    best_codes = None
+    for start in range(0, total, chunk):
+        costs = np.asarray(
+            _chunk_costs(jnp.asarray(start, jnp.int32), W, n, N, K, chunk)
+        )
+        idx = np.argpartition(costs, min(topk, chunk - 1))[:topk]
+        cand_costs = costs[idx]
+        cand_codes = start + idx.astype(np.int64)
+        if best_costs is None:
+            best_costs, best_codes = cand_costs, cand_codes
+        else:
+            cc = np.concatenate([best_costs, cand_costs])
+            cd = np.concatenate([best_codes, cand_codes])
+            keep = np.argsort(cc)[:topk]
+            best_costs, best_codes = cc[keep], cd[keep]
+
+    order = np.argsort(best_costs)
+    best_costs, best_codes = best_costs[order], best_codes[order]
+    c0 = float(best_costs[0])
+    tol = rtol * max(abs(c0), 1e-12)
+    is_opt = best_costs <= c0 + tol
+    worse = best_costs[~is_opt]
+    second = float(worse[0]) if worse.size else float("nan")
+
+    sol_codes = best_codes[is_opt]
+    bits = (sol_codes[:, None] >> np.arange(n)[None, :]) & 1
+    sols = (2 * bits - 1).astype(np.float32).reshape(-1, N, K)
+    return BruteForceResult(
+        best_cost=c0,
+        second_cost=second,
+        best_norm=float(np.sqrt(max(c0, 0.0))),
+        solutions=sols,
+        costs_topk=best_costs,
+    )
+
+
+def exact_solutions(result: BruteForceResult) -> np.ndarray:
+    """All distinct exact solutions (should number K! * 2^K, e.g. 48)."""
+    sols = result.solutions
+    # Dedupe exact binary duplicates (chunk-boundary overlaps cannot occur,
+    # but be safe), keep orbit members (they are distinct matrices).
+    flat = (sols.reshape(sols.shape[0], -1) > 0).astype(np.uint8)
+    _, idx = np.unique(flat, axis=0, return_index=True)
+    return sols[np.sort(idx)]

@@ -1,0 +1,272 @@
+"""Integer decomposition  W ~ V = M C  (Kadowaki & Ambai, Sci. Rep. 2022).
+
+``M`` is a binary matrix in {-1, +1}^{N x K}, ``C`` a real matrix in R^{K x D}.
+This module implements:
+
+  * the closed-form least-squares closure  C*(M) = (M^T M)^+ M^T W     (Eq. 6)
+  * the pseudo-Boolean NLIP objective      L(M) = ||W - M C*(M)||_F^2  (Eq. 8-9)
+    in a fast Gram form that never materialises an N x D residual,
+  * the *original* greedy rank-one algorithm (SPADE, Eq. 5),
+  * an alternating (separate M / C) baseline in the spirit of the paper's
+    ref. [8]: exact per-row enumeration of 2^K sign patterns for fixed C,
+  * bit-packing utilities used by the compressed inference path.
+
+All functions are pure, jit-able and vmap-able; batched variants are provided
+for the brute-force search and the BBO inner loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "least_squares_C",
+    "objective",
+    "objective_from_x",
+    "residual_norm",
+    "residual_error",
+    "make_objective",
+    "greedy_decompose",
+    "alternating_decompose",
+    "sign_enumeration",
+    "pack_bits",
+    "unpack_bits",
+    "GreedyResult",
+]
+
+
+# ---------------------------------------------------------------------------
+# Objective  (Eq. 6, 8, 9)
+# ---------------------------------------------------------------------------
+
+def _gram_pinv_terms(M: jax.Array, W: jax.Array, tol: float):
+    """Shared helper: eigendecomposition of the K x K Gram matrix.
+
+    Returns (lam, T) with ``lam`` the Gram eigenvalues and ``T = U^T M^T W``
+    the projections of M^T W onto Gram eigenvectors.  The projection of W
+    onto col(M) has squared norm  sum_i 1[lam_i > tol] |T_i|^2 / lam_i.
+
+    Using eigh keeps everything well-defined when M has linearly *dependent*
+    columns (duplicate +-columns occur in brute-force enumeration), matching
+    the pseudo-inverse semantics of Eq. 6.
+    """
+    G = M.T @ M                      # (K, K) Gram matrix, integer-valued
+    P = M.T @ W                      # (K, D)
+    lam, U = jnp.linalg.eigh(G)
+    T = U.T @ P                      # (K, D)
+    return lam, T
+
+
+def least_squares_C(M: jax.Array, W: jax.Array, tol: float = 1e-6) -> jax.Array:
+    """Optimal real factor  C*(M) = (M^T M)^+ M^T W  (Eq. 6)."""
+    G = M.T @ M
+    P = M.T @ W
+    lam, U = jnp.linalg.eigh(G)
+    inv = jnp.where(lam > tol * jnp.max(lam), 1.0 / lam, 0.0)
+    return (U * inv[None, :]) @ (U.T @ P)
+
+
+def objective(M: jax.Array, W: jax.Array, tol: float = 1e-6) -> jax.Array:
+    """Pseudo-Boolean cost  L(M) = ||W - M C*(M)||_F^2   (Eq. 8-9).
+
+    Gram form:  L = ||W||^2 - sum_i 1[lam_i > tol] |u_i^T M^T W|^2 / lam_i,
+    which costs O(K^2 (N + D) + K^3) instead of the naive O(N K D + N D).
+    """
+    M = M.astype(W.dtype)
+    lam, T = _gram_pinv_terms(M, W, tol)
+    lam_max = jnp.maximum(jnp.max(lam), 1.0)
+    keep = lam > tol * lam_max
+    proj = jnp.sum(jnp.where(keep[:, None], T * T / jnp.where(keep, lam, 1.0)[:, None], 0.0))
+    return jnp.sum(W * W) - proj
+
+
+def objective_from_x(x: jax.Array, W: jax.Array, K: int, tol: float = 1e-6) -> jax.Array:
+    """Objective on the flattened spin vector x in {-1,+1}^{N*K} (row-major)."""
+    N = W.shape[0]
+    M = x.reshape(N, K)
+    return objective(M, W, tol)
+
+
+def residual_norm(M: jax.Array, W: jax.Array) -> jax.Array:
+    """||f(M)||_2 = ||W - M C*(M)||_F (Frobenius norm, not squared)."""
+    return jnp.sqrt(jnp.maximum(objective(M, W), 0.0))
+
+
+def residual_error(M: jax.Array, W: jax.Array, exact_norm: jax.Array) -> jax.Array:
+    """Paper's comparison measure: (||f(M)||_2 - ||f(M*)||_2) / ||W||_2."""
+    return (residual_norm(M, W) - exact_norm) / jnp.linalg.norm(W)
+
+
+def make_objective(W: jax.Array, K: int, tol: float = 1e-6):
+    """Black-box function  f(x) -> cost  used by the BBO loop (jit-able)."""
+
+    def f(x: jax.Array) -> jax.Array:
+        return objective_from_x(x, W, K, tol)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Original greedy algorithm (SPADE, Eq. 5)
+# ---------------------------------------------------------------------------
+
+class GreedyResult(NamedTuple):
+    M: jax.Array          # (N, K) in {-1, +1}
+    C: jax.Array          # (K, D)
+    cost: jax.Array       # ||W - M C||_F^2 with the *greedy* C
+    cost_refit: jax.Array # ||W - M C*(M)||_F^2 after least-squares refit
+
+
+def _rank_one_best(R: jax.Array, key: jax.Array, iters: int, restarts: int):
+    """Best rank-one binary approximation  min_{m,c} ||R - m c^T||^2.
+
+    Alternating updates (m = sign(R c), c = R^T m / N) from ``restarts``
+    initialisations: the deterministic top-right-singular-vector start plus
+    random sign vectors.  This mirrors the original SPADE optimisation; it is
+    a heuristic (the subproblem itself is NP-hard).
+    """
+    N, D = R.shape
+
+    # Deterministic init: leading right singular vector via power iteration.
+    def power_iter(v, _):
+        v = R.T @ (R @ v)
+        return v / (jnp.linalg.norm(v) + 1e-30), None
+
+    v0 = jnp.ones((D,), R.dtype) / jnp.sqrt(D)
+    v1, _ = jax.lax.scan(power_iter, v0, None, length=8)
+
+    keys = jax.random.split(key, restarts)
+    m_rand = jnp.sign(
+        jax.random.normal(jax.random.fold_in(key, 17), (restarts, N), R.dtype)
+    )
+    m_det = jnp.sign(R @ v1)
+    m_det = jnp.where(m_det == 0, 1.0, m_det)
+    m_init = jnp.concatenate([m_det[None], m_rand], axis=0)   # (restarts+1, N)
+
+    def alternate(m, _):
+        c = R.T @ m / N                       # optimal c for fixed m
+        m = jnp.sign(R @ c)
+        m = jnp.where(m == 0, 1.0, m)
+        return m, None
+
+    def run_one(m0):
+        m, _ = jax.lax.scan(alternate, m0, None, length=iters)
+        c = R.T @ m / N
+        cost = jnp.sum(R * R) - N * jnp.sum(c * c)   # ||R||^2 - ||R^T m||^2/N
+        return m, c, cost
+
+    ms, cs, costs = jax.vmap(run_one)(m_init)
+    del keys
+    best = jnp.argmin(costs)
+    return ms[best], cs[best]
+
+
+@functools.partial(jax.jit, static_argnames=("K", "iters", "restarts"))
+def greedy_decompose(
+    W: jax.Array,
+    K: int,
+    key: jax.Array | None = None,
+    iters: int = 16,
+    restarts: int = 4,
+) -> GreedyResult:
+    """The paper's *original algorithm*: K sequential rank-one fits (Eq. 5).
+
+    Each step fits the residual of the previous steps; previously fixed
+    vectors are never revisited, so it cannot escape local minima (the
+    property the BBO method improves upon).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    N, D = W.shape
+
+    def step(R, k):
+        m, c = _rank_one_best(R, jax.random.fold_in(key, k), iters, restarts)
+        return R - m[:, None] * c[None, :], (m, c)
+
+    R, (ms, cs) = jax.lax.scan(step, W, jnp.arange(K))
+    M = ms.T                                   # (N, K)
+    C = cs                                     # (K, D)
+    cost = jnp.sum(R * R)
+    return GreedyResult(M=M, C=C, cost=cost, cost_refit=objective(M, W))
+
+
+# ---------------------------------------------------------------------------
+# Alternating (separate M / C) baseline — paper ref. [8] style
+# ---------------------------------------------------------------------------
+
+def sign_enumeration(K: int) -> jnp.ndarray:
+    """All 2^K sign vectors in {-1,+1}^K, shape (2^K, K). Static for small K."""
+    idx = jnp.arange(2**K)
+    bits = (idx[:, None] >> jnp.arange(K)[None, :]) & 1
+    return (2 * bits - 1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "iters"))
+def alternating_decompose(
+    W: jax.Array,
+    K: int,
+    key: jax.Array | None = None,
+    iters: int = 25,
+    M0: jax.Array | None = None,
+):
+    """Block-coordinate descent: exact C for fixed M (least squares), exact
+    *per-row* M for fixed C (enumerate all 2^K sign patterns per row — rows
+    are independent given C).  Monotone non-increasing cost.
+
+    This is the "optimise integer and real matrices separately" strategy the
+    paper contrasts with its simultaneous BBO; it serves as a baseline and as
+    the production-path refiner in ``repro.core.compress``.
+    """
+    N, D = W.shape
+    E = sign_enumeration(K).astype(W.dtype)          # (2^K, K)
+    if M0 is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        M = jnp.sign(jax.random.normal(key, (N, K), W.dtype))
+        M = jnp.where(M == 0, 1.0, M)
+    else:
+        M = M0.astype(W.dtype)
+
+    def step(M, _):
+        C = least_squares_C(M, W)                     # (K, D)
+        # cost[r, e] = ||w_r - e C||^2 = ||w_r||^2 - 2 e.(C w_r) + e (C C^T) e
+        G = C @ C.T                                   # (K, K)
+        lin = E @ (C @ W.T)                           # (2^K, N)
+        quad = jnp.einsum("ek,kl,el->e", E, G, E)     # (2^K,)
+        scores = quad[:, None] - 2.0 * lin            # (2^K, N), const dropped
+        M_new = E[jnp.argmin(scores, axis=0)]         # (N, K)
+        return M_new, None
+
+    M, _ = jax.lax.scan(step, M, None, length=iters)
+    C = least_squares_C(M, W)
+    return M, C, objective(M, W)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (storage format for compressed inference)
+# ---------------------------------------------------------------------------
+
+def pack_bits(M: jax.Array) -> jax.Array:
+    """Pack a {-1,+1} matrix (N, K) into uint8 (N, ceil(K/8)); +1 -> bit 1.
+
+    Bit j of byte b holds column 8*b + j (LSB-first).
+    """
+    N, K = M.shape
+    Kp = -(-K // 8) * 8
+    bits = (M > 0).astype(jnp.uint8)
+    bits = jnp.pad(bits, ((0, 0), (0, Kp - K)))
+    bits = bits.reshape(N, Kp // 8, 8)
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: jax.Array, K: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_bits`: uint8 (N, ceil(K/8)) -> {-1,+1} (N, K)."""
+    N, B = packed.shape
+    bits = (packed[:, :, None] >> jnp.arange(8, dtype=jnp.uint8)[None, None, :]) & 1
+    M = bits.reshape(N, B * 8)[:, :K]
+    return (2 * M.astype(dtype) - 1)

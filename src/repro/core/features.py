@@ -1,0 +1,55 @@
+"""Quadratic feature map for the BOCS surrogate models.
+
+BOCS fits Bayesian linear regression on the expanded features
+``phi(x) = [1, x_1..x_n, x_1 x_2, ..., x_{n-1} x_n]`` so that the learned
+coefficients define a QUBO/Ising energy the solver can optimise
+(second-order terms are treated as independent explanatory variables).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["num_features", "pair_indices", "featurize", "coeffs_to_ising"]
+
+
+def num_features(n: int) -> int:
+    """1 (bias) + n (linear) + n(n-1)/2 (pairwise)."""
+    return 1 + n + n * (n - 1) // 2
+
+
+@functools.lru_cache(maxsize=None)
+def pair_indices(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Upper-triangular index pair (i, j), i < j, in fixed row-major order."""
+    iu, ju = np.triu_indices(n, k=1)
+    return iu, ju
+
+
+def featurize(x: jax.Array) -> jax.Array:
+    """phi(x) for a single x (n,) -> (num_features(n),). vmap for batches."""
+    n = x.shape[-1]
+    iu, ju = pair_indices(n)
+    pairs = x[..., iu] * x[..., ju]
+    one = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+    return jnp.concatenate([one, x, pairs], axis=-1)
+
+
+def coeffs_to_ising(alpha: jax.Array, n: int):
+    """Split regression coefficients into Ising terms (h, J).
+
+    Energy model:  E(x) = alpha_0 + h . x + x^T J x  with J strictly upper
+    triangular scattered to a symmetric matrix with zero diagonal (J_sym =
+    (J + J^T)/2 counted once on each side: we store B with B_ij = B_ji =
+    alpha_ij / 2 so that x^T B x = sum_{i<j} alpha_ij x_i x_j).
+    """
+    iu, ju = pair_indices(n)
+    h = alpha[1 : 1 + n]
+    a_pair = alpha[1 + n :]
+    B = jnp.zeros((n, n), alpha.dtype)
+    B = B.at[iu, ju].set(a_pair / 2.0)
+    B = B + B.T
+    return h, B

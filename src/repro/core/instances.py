@@ -1,0 +1,52 @@
+"""Problem-instance generation (paper Methods: "Shrunk VGG matrix").
+
+The paper shrinks the final fully connected layer of VGG16 (4096 x 1000) via
+SVD: keep the top-8 singular values, select 8 rows of U and 100 rows of V.
+Pretrained VGG16 weights are not available offline (DESIGN.md §6), so we
+reproduce the *statistics* of that construction exactly:
+
+  * rows of a 4096 x 4096 orthogonal matrix restricted to its first 8 columns
+    are (to O(1/sqrt(4096))) iid N(0, 1/4096) — same for V;
+  * the top of a VGG fc-layer spectrum is well described by a power law
+    sigma_i ∝ i^(-gamma), gamma ~= 0.8.
+
+So an instance is  W = A diag(sigma) B  with A (N x r), B (r x D) Gaussian
+with matching scales.  Ten seeds give the paper's ten instances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["shrunk_vgg_instance", "random_instance", "paper_instances"]
+
+
+def shrunk_vgg_instance(
+    seed: int,
+    N: int = 8,
+    D: int = 100,
+    rank: int = 8,
+    gamma: float = 0.8,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """One shrunk-VGG-like instance W (N x D)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = jax.random.normal(k1, (N, rank), dtype) / jnp.sqrt(4096.0)
+    B = jax.random.normal(k2, (rank, D), dtype) / jnp.sqrt(1000.0)
+    sigma = (jnp.arange(1, rank + 1, dtype=dtype)) ** (-gamma)
+    W = A @ (sigma[:, None] * B)
+    # Normalise Frobenius norm to 1: the paper's residual measure divides by
+    # ||W||_2, so the scale is immaterial; normalising aids fp32 conditioning.
+    return W / jnp.linalg.norm(W)
+
+
+def random_instance(seed: int, N: int = 8, D: int = 100, dtype=jnp.float32) -> jax.Array:
+    """Unstructured Gaussian control instance."""
+    W = jax.random.normal(jax.random.PRNGKey(seed ^ 0x5EED), (N, D), dtype)
+    return W / jnp.linalg.norm(W)
+
+
+def paper_instances(num: int = 10, **kw) -> list[jax.Array]:
+    """The paper's ten instances (seeds 0..9)."""
+    return [shrunk_vgg_instance(seed, **kw) for seed in range(num)]

@@ -1,0 +1,212 @@
+"""Ising solvers: simulated annealing (SA), simulated quenching (SQ) and
+simulated quantum annealing (SQA, the paper's "QA" back-end).
+
+All solvers minimise the Ising energy
+
+    E(x) = h . x + x^T B x ,   x in {-1, +1}^n ,
+
+with ``B`` symmetric, zero diagonal (the form produced by
+``repro.core.features.coeffs_to_ising``).  They are pure JAX: a full solve
+(num_reads restarts x num_sweeps sweeps) is one ``lax.scan`` program, so it
+fuses into the surrounding BBO iteration and vmaps over tiles/runs.
+
+Hardware note (DESIGN.md §4/§6): the paper uses the D-Wave Ocean SDK (neal SA
++ a QPU).  Offline we keep the same defaults in spirit — geometric temperature
+schedule between scaled estimates of the max/min effective fields (factors
+2.9 / 0.4), ``num_reads=10`` — and replace the QPU by path-integral simulated
+QA.  The paper itself observed SA ~= QA ~= SQ, so conclusions are insensitive
+to this substitution.
+
+Metropolis sweeps update spins sequentially (colour-free Gibbs order) with an
+incrementally maintained local field:  flipping spin i changes the energy by
+``dE = -2 x_i (h_i + 2 (B x)_i)`` and updates the field of every j by
+``-4 B_ji x_i``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ising_energy",
+    "solve_sa",
+    "solve_sq",
+    "solve_sqa",
+    "solve",
+    "SOLVERS",
+]
+
+
+def ising_energy(x: jax.Array, h: jax.Array, B: jax.Array) -> jax.Array:
+    return x @ h + x @ (B @ x)
+
+
+def _field(x, h, B):
+    return h + 2.0 * (B @ x)
+
+
+def _sweep(carry, key, B, temps):
+    """One Metropolis sweep at temperature ``temps`` (scalar per sweep)."""
+    x, f, key_unused = carry
+    n = x.shape[0]
+    del key_unused
+
+    def body(i, state):
+        x, f, key = state
+        key, sub = jax.random.split(key)
+        dE = -2.0 * x[i] * f[i]
+        accept = jax.random.uniform(sub) < jnp.exp(
+            jnp.minimum(-dE / jnp.maximum(temps, 1e-12), 0.0)
+        )
+        accept = jnp.logical_or(dE < 0.0, accept)
+        xi_new = jnp.where(accept, -x[i], x[i])
+        delta = xi_new - x[i]                       # 0 or -2 x_i
+        f = f + 2.0 * B[:, i] * delta               # dF_j = 2 B_ji (x_i' - x_i)
+        x = x.at[i].set(xi_new)
+        return x, f, key
+
+    x, f, key = jax.lax.fori_loop(0, n, body, (x, f, key))
+    return (x, f, key), None
+
+
+def _temperature_schedule(h, B, num_sweeps, hot=2.9, cold=0.4):
+    """Geometric schedule between scaled max/min effective-field estimates,
+    mirroring the D-Wave ``neal`` defaults cited by the paper."""
+    row = jnp.abs(h) + 2.0 * jnp.sum(jnp.abs(B), axis=1)
+    hmax = jnp.maximum(jnp.max(row), 1e-9)
+    # min *nonzero* single-flip scale: smallest |B| entry or |h| entry.
+    mags = jnp.concatenate([jnp.abs(h), 2.0 * jnp.abs(B).reshape(-1)])
+    hmin = jnp.min(jnp.where(mags > 1e-12, mags, hmax))
+    t_hot = hot * hmax
+    t_cold = jnp.maximum(cold * hmin, 1e-6)
+    r = jnp.linspace(0.0, 1.0, num_sweeps)
+    return t_hot * (t_cold / t_hot) ** r
+
+
+def _run_chain(key, h, B, temps):
+    n = h.shape[0]
+    key, k0 = jax.random.split(key)
+    x0 = jnp.sign(jax.random.rademacher(k0, (n,), dtype=h.dtype))
+    f0 = _field(x0, h, B)
+    (x, _, _), _ = jax.lax.scan(
+        lambda c, t_and_k: _sweep(c, t_and_k[1], B, t_and_k[0]),
+        (x0, f0, key),
+        (temps, jax.random.split(key, temps.shape[0])),
+    )
+    return x, ising_energy(x, h, B)
+
+
+@functools.partial(jax.jit, static_argnames=("num_sweeps", "num_reads"))
+def solve_sa(
+    key: jax.Array,
+    h: jax.Array,
+    B: jax.Array,
+    num_sweeps: int = 64,
+    num_reads: int = 10,
+):
+    """Simulated annealing; returns the best of ``num_reads`` restarts."""
+    temps = _temperature_schedule(h, B, num_sweeps)
+    xs, es = jax.vmap(lambda k: _run_chain(k, h, B, temps))(
+        jax.random.split(key, num_reads)
+    )
+    best = jnp.argmin(es)
+    return xs[best], es[best]
+
+
+@functools.partial(jax.jit, static_argnames=("num_sweeps", "num_reads"))
+def solve_sq(
+    key: jax.Array,
+    h: jax.Array,
+    B: jax.Array,
+    num_sweeps: int = 64,
+    num_reads: int = 10,
+    temperature: float = 0.1,
+):
+    """Simulated quenching: constant low temperature (paper: T = 0.1)."""
+    temps = jnp.full((num_sweeps,), temperature, h.dtype)
+    xs, es = jax.vmap(lambda k: _run_chain(k, h, B, temps))(
+        jax.random.split(key, num_reads)
+    )
+    best = jnp.argmin(es)
+    return xs[best], es[best]
+
+
+# ---------------------------------------------------------------------------
+# Simulated quantum annealing (path-integral Monte Carlo)
+# ---------------------------------------------------------------------------
+
+def _sqa_chain(key, h, B, gammas, n_trotter, temperature):
+    """One SQA run: ``n_trotter`` coupled replicas, transverse field annealed
+    along ``gammas``; returns the best replica at the end."""
+    n = h.shape[0]
+    key, k0 = jax.random.split(key)
+    X0 = jnp.sign(jax.random.rademacher(k0, (n_trotter, n), dtype=h.dtype))
+    PT = n_trotter * temperature
+
+    def sweep(X, inputs):
+        gamma, key = inputs
+        # Ferromagnetic inter-slice coupling J_perp(Gamma).
+        jperp = -0.5 * PT * jnp.log(jnp.tanh(jnp.maximum(gamma / PT, 1e-7)))
+
+        def slice_body(p, state):
+            X, key = state
+
+            def spin_body(i, state):
+                X, key = state
+                key, sub = jax.random.split(key)
+                x = X[p]
+                f = h[i] + 2.0 * (B[i] @ x)
+                up = X[(p + 1) % n_trotter, i]
+                dn = X[(p - 1) % n_trotter, i]
+                dE = -2.0 * x[i] * (f / n_trotter + jperp * (up + dn))
+                accept = jnp.logical_or(
+                    dE < 0.0,
+                    jax.random.uniform(sub) < jnp.exp(jnp.minimum(-dE / temperature, 0.0)),
+                )
+                X = X.at[p, i].set(jnp.where(accept, -x[i], x[i]))
+                return X, key
+
+            return jax.lax.fori_loop(0, n, spin_body, (X, key))
+
+        X, key = jax.lax.fori_loop(0, n_trotter, slice_body, (X, key))
+        return X, None
+
+    keys = jax.random.split(key, gammas.shape[0])
+    X, _ = jax.lax.scan(sweep, X0, (gammas, keys))
+    es = jax.vmap(lambda x: ising_energy(x, h, B))(X)
+    best = jnp.argmin(es)
+    return X[best], es[best]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_sweeps", "num_reads", "n_trotter")
+)
+def solve_sqa(
+    key: jax.Array,
+    h: jax.Array,
+    B: jax.Array,
+    num_sweeps: int = 48,
+    num_reads: int = 10,
+    n_trotter: int = 8,
+    temperature: float = 0.05,
+    gamma0: float = 3.0,
+):
+    """Simulated QA: transverse field annealed geometrically Gamma0 -> ~0."""
+    r = jnp.linspace(0.0, 1.0, num_sweeps)
+    gammas = gamma0 * (1e-2 / gamma0) ** r
+    xs, es = jax.vmap(
+        lambda k: _sqa_chain(k, h, B, gammas, n_trotter, temperature)
+    )(jax.random.split(key, num_reads))
+    best = jnp.argmin(es)
+    return xs[best], es[best]
+
+
+SOLVERS = {"sa": solve_sa, "sq": solve_sq, "qa": solve_sqa}
+
+
+def solve(name: str, key, h, B, **kw):
+    return SOLVERS[name](key, h, B, **kw)

@@ -1,0 +1,92 @@
+"""Compressed-weight representation and inference path.
+
+A dense weight ``W (d_in, d_out)`` compressed by tile-wise integer
+decomposition (DESIGN.md §2) is stored as a dict:
+
+    {"m_packed": uint8 (r, c, tn, ceil(K/8)),   # per-tile binary factor M
+     "C":        (r, c, K, td) float}           # per-tile real factor C
+
+with ``d_in = r * tn`` and ``d_out = c * td``.  The forward product
+``y = x @ W_hat`` becomes two skinny matmuls per tile:
+
+    z[r, c] = x[r] @ M[r, c]      (tn -> K,  binary matmul)
+    y[c]   += z[r, c] @ C[r, c]   (K -> td,  small real matmul)
+
+Memory ratio vs bf16 dense:  K/(16*td) + K/tn  (e.g. ~1/8 at K=4, tn=32,
+td=128).  MAC ratio: K*(1/tn + 1/td).
+
+On TPU the binary matmul runs through ``repro.kernels.bitlinear`` (bit-packed
+HBM reads, VMEM unpack, MXU matmul — DESIGN.md §4).  The pure-jnp path below
+is the oracle and the CPU/dry-run fallback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "is_compressed",
+    "apply_compressed",
+    "decompress",
+    "compressed_num_bytes",
+    "dense_num_bytes",
+]
+
+_KEYS = frozenset({"m_packed", "C"})
+
+# Set by repro.kernels.ops at import time when a Pallas path is available.
+_BITLINEAR_IMPL = None
+
+
+def register_bitlinear(fn) -> None:
+    global _BITLINEAR_IMPL
+    _BITLINEAR_IMPL = fn
+
+
+def is_compressed(w) -> bool:
+    return isinstance(w, dict) and _KEYS.issubset(w.keys())
+
+
+def _unpack(m_packed: jax.Array, K: int, dtype) -> jax.Array:
+    """uint8 (..., kb) -> {-1,+1} (..., K)."""
+    bits = (m_packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    bits = bits.reshape(*m_packed.shape[:-1], m_packed.shape[-1] * 8)[..., :K]
+    return (2 * bits.astype(dtype) - 1)
+
+
+def decompress(w: dict, dtype=None) -> jax.Array:
+    """Materialise W_hat = M C (for tests / tiny layers)."""
+    C = w["C"]
+    dtype = dtype or C.dtype
+    r, c, K, td = C.shape
+    tn = w["m_packed"].shape[2]
+    M = _unpack(w["m_packed"], K, dtype)                    # (r, c, tn, K)
+    tiles = jnp.einsum("rcnk,rckd->rcnd", M, C.astype(dtype))
+    return tiles.transpose(0, 2, 1, 3).reshape(r * tn, c * td)
+
+
+def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
+    """y = x @ W_hat without materialising W_hat."""
+    C = w["C"]
+    r, c, K, td = C.shape
+    tn = w["m_packed"].shape[2]
+    lead = x.shape[:-1]
+    xt = x.reshape(*lead, r, tn)
+    if _BITLINEAR_IMPL is not None:
+        z = _BITLINEAR_IMPL(xt, w["m_packed"], K)           # (..., r, c, K)
+    else:
+        M = _unpack(w["m_packed"], K, x.dtype)              # (r, c, tn, K)
+        z = jnp.einsum("...rn,rcnk->...rck", xt, M)
+    y = jnp.einsum("...rck,rckd->...cd", z, C.astype(x.dtype))
+    return y.reshape(*lead, c * td)
+
+
+def compressed_num_bytes(w: dict) -> int:
+    return w["m_packed"].size + w["C"].size * w["C"].dtype.itemsize
+
+
+def dense_num_bytes(w: dict, dense_itemsize: int = 2) -> int:
+    r, c, K, td = w["C"].shape
+    tn = w["m_packed"].shape[2]
+    return r * tn * c * td * dense_itemsize

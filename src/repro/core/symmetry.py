@@ -1,0 +1,102 @@
+"""Solution-space symmetry of the integer decomposition.
+
+``V = sum_i m_i c_i^T`` is invariant under (a) permuting the K rank-one terms
+and (b) flipping the sign of any (m_i, c_i) pair, so every solution M has an
+orbit of K! * 2^K equivalent binary matrices (48 for K = 3).  This module
+generates orbits (used by the nBOCSa data-augmentation variant and by tests),
+canonicalises matrices for de-duplication, and reproduces the paper's
+Ward-clustering domain analysis (Fig. 4 / Fig. 5).
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "orbit_size",
+    "orbit_maps",
+    "orbit",
+    "orbit_flat",
+    "canonical_key",
+    "dedupe_exact",
+    "cluster_exact_solutions",
+    "assign_domains",
+]
+
+
+def orbit_size(K: int) -> int:
+    import math
+
+    return int(math.factorial(K) * 2**K)
+
+
+@functools.lru_cache(maxsize=None)
+def orbit_maps(K: int) -> tuple[np.ndarray, np.ndarray]:
+    """(perms, signs): all column permutations (K!*2^K, K) int and the
+    matching +-1 sign patterns (K!*2^K, K)."""
+    perms = np.array(list(itertools.permutations(range(K))), dtype=np.int32)
+    signs = np.array(
+        [[(1 if (s >> k) & 1 else -1) for k in range(K)] for s in range(2**K)],
+        dtype=np.float32,
+    )
+    P = np.repeat(perms, 2**K, axis=0)             # (K!*2^K, K)
+    S = np.tile(signs, (len(perms), 1))            # (K!*2^K, K)
+    return P, S
+
+
+def orbit(M: jax.Array) -> jax.Array:
+    """All K!*2^K equivalent matrices of M (N, K) -> (orbit, N, K)."""
+    K = M.shape[-1]
+    P, S = orbit_maps(K)
+    return jnp.transpose(M[:, P], (1, 0, 2)) * S[:, None, :]
+
+
+def orbit_flat(x: jax.Array, N: int, K: int) -> jax.Array:
+    """Orbit on the flattened spin vector: (N*K,) -> (orbit, N*K)."""
+    M = x.reshape(N, K)
+    return orbit(M).reshape(orbit_size(K), N * K)
+
+
+def canonical_key(M: np.ndarray) -> bytes:
+    """Lexicographically-minimal orbit element, as a hashable key."""
+    O = np.asarray(orbit(jnp.asarray(M, jnp.float32)))
+    flat = (O.reshape(O.shape[0], -1) > 0).astype(np.uint8)
+    order = np.lexsort(flat.T[::-1])
+    return flat[order[0]].tobytes()
+
+
+def dedupe_exact(Ms: np.ndarray) -> np.ndarray:
+    """Drop orbit-equivalent duplicates from a stack of solutions."""
+    seen, keep = set(), []
+    for i, M in enumerate(Ms):
+        k = canonical_key(M)
+        if k not in seen:
+            seen.add(k)
+            keep.append(i)
+    return Ms[np.array(keep, dtype=np.int64)]
+
+
+def cluster_exact_solutions(Ms: np.ndarray, num_domains: int = 4) -> np.ndarray:
+    """Ward hierarchical clustering of exact solutions by Hamming distance,
+    cut into ``num_domains`` groups (paper Fig. 5b).  Returns labels."""
+    from scipy.cluster.hierarchy import fcluster, linkage
+
+    flat = (Ms.reshape(Ms.shape[0], -1) > 0).astype(np.float64)
+    Z = linkage(flat, method="ward")
+    return fcluster(Z, t=num_domains, criterion="maxclust") - 1
+
+
+def assign_domains(X: np.ndarray, exact: np.ndarray, labels: np.ndarray) -> np.ndarray:
+    """Assign each candidate x (rows of X, flattened +-1) to the domain of the
+    Hamming-closest exact solution (paper Fig. 4)."""
+    Xf = X.reshape(X.shape[0], -1)
+    Ef = exact.reshape(exact.shape[0], -1)
+    # Hamming distance for +-1 vectors: (n - x.e)/2
+    dots = Xf @ Ef.T
+    nearest = np.argmax(dots, axis=1)
+    return labels[nearest]

@@ -1,0 +1,100 @@
+"""Fault-tolerance & straggler-mitigation utilities.
+
+At 1000+ nodes, the framework-level contract is:
+  1. every piece of work is a pure function of (checkpoint step, data step)
+     — see data/pipeline.py — so restarts and work-stealing need no state
+     handoff beyond the latest committed checkpoint;
+  2. the launcher supervises the training process, restarts it on failure,
+     and resumes from the newest valid checkpoint (checkpoint/ guarantees
+     atomicity);
+  3. heartbeats expose liveness; a coordinator (or SLURM/GKE health checks)
+     reschedules dead hosts — offline we implement the file-based heartbeat
+     and the supervision loop, and unit-test the restart path by injecting
+     failures.
+
+Straggler mitigation: step-time EMA per host; hosts slower than
+``straggler_factor`` x median are flagged for replacement — with
+deterministic data sharding a replacement is cheap (no data-state to move).
+The BBO compression pipeline (core/compress.py) is additionally speculative-
+retry friendly: tiles are idempotent, so a slow tile can simply be recomputed
+elsewhere and the first result wins.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+__all__ = ["Heartbeat", "StepTimer", "run_with_restarts"]
+
+
+class Heartbeat:
+    """File-based liveness beacon (shared-FS / sidecar-scrapable)."""
+
+    def __init__(self, path: str, interval_s: float = 15.0):
+        self.path = path
+        self.interval_s = interval_s
+        self._last = 0.0
+
+    def beat(self, step: int, extra: dict | None = None) -> None:
+        now = time.time()
+        if now - self._last < self.interval_s:
+            return
+        self._last = now
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"time": now, "step": step, **(extra or {})}, f)
+        os.replace(tmp, self.path)
+
+    @staticmethod
+    def is_alive(path: str, timeout_s: float = 120.0) -> bool:
+        try:
+            with open(path) as f:
+                return time.time() - json.load(f)["time"] < timeout_s
+        except (OSError, ValueError, KeyError):
+            return False
+
+
+class StepTimer:
+    """EMA step timing + straggler flag (vs. a reference median)."""
+
+    def __init__(self, alpha: float = 0.1):
+        self.alpha = alpha
+        self.ema = None
+        self._t0 = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
+        return dt
+
+    def is_straggler(self, median_ema: float, factor: float = 1.5) -> bool:
+        return self.ema is not None and self.ema > factor * median_ema
+
+
+def run_with_restarts(
+    make_and_run: Callable[[int], None],
+    max_restarts: int = 3,
+    on_failure: Callable[[int, BaseException], None] | None = None,
+) -> int:
+    """Supervision loop: call ``make_and_run(attempt)``; on exception retry
+    up to ``max_restarts`` times (the callee resumes from its newest
+    checkpoint).  Returns the number of restarts used."""
+    attempt = 0
+    while True:
+        try:
+            make_and_run(attempt)
+            return attempt
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:  # noqa: BLE001 - supervision boundary
+            if on_failure is not None:
+                on_failure(attempt, e)
+            attempt += 1
+            if attempt > max_restarts:
+                raise

@@ -1,0 +1,208 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates every parameter with *logical* axis names
+(repro/models/params.py); this module maps them to mesh axes:
+
+  rules (defaults, ParallelConfig-dependent):
+    vocab   -> model        TP of embeddings / logits
+    embed   -> data         FSDP (ZeRO-3): parameters+optimiser sharded on dp
+    mlp     -> model        TP of FFN hidden
+    heads   -> model        TP of attention heads
+    kv      -> model        TP of fused (kv_heads * head_dim)
+    experts -> model        EP of MoE experts
+    ssm_in  -> model        TP of SSD inner projections
+    batch   -> (pod, data)  activations
+    seq     -> model        SP of the scanned activation carry (train)
+
+Conflict resolution: a mesh axis may appear once per PartitionSpec — later
+logical axes fall back to None.  Non-divisible dims fall back to None
+(e.g. internvl2's vocab 92553 is not divisible by 16).  Parameters are NOT
+sharded over the ``pod`` axis by default: cross-pod traffic is then only the
+gradient all-reduce, keeping the slow DCI links off the layer critical path
+(DESIGN.md §5); ``fsdp_pod`` could widen FSDP to both axes if ever needed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+
+__all__ = [
+    "make_rules",
+    "spec_for",
+    "param_shardings",
+    "activation_spec",
+    "constrain",
+    "activation_rules",
+]
+
+
+def make_rules(pcfg: ParallelConfig) -> dict:
+    has_model = "model" in pcfg.mesh_axes and not pcfg.dp_includes_model
+    model = "model" if has_model else None
+    data = "data" if "data" in pcfg.mesh_axes else None
+    # pod-FSDP: at multi-pod scale parameters shard over BOTH dp axes —
+    # llama3-405b's stacked layer-gradient buffers alone exceed a 16 GB v5e
+    # chip at 256-way sharding; 512-way fits (EXPERIMENTS.md §Dry-run).
+    if data is not None and pcfg.fsdp and "pod" in pcfg.mesh_axes:
+        fsdp_axes: object = ("pod", "data")
+    elif pcfg.fsdp:
+        fsdp_axes = data
+    else:
+        fsdp_axes = None
+    rules = {
+        "vocab": model,
+        "embed": fsdp_axes,
+        "mlp": model,
+        "heads": model,
+        "kv": model,
+        "experts": model,
+        "ssm_in": model,
+        None: None,
+    }
+    return rules
+
+
+def spec_for(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> P:
+    """Logical axes + shape -> PartitionSpec with conflict/divisibility
+    fallback.  Rule values may be a single mesh axis or a tuple of axes
+    (e.g. pod-FSDP shards 'embed' over ('pod', 'data'))."""
+    used = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        rule = rules.get(name)
+        cand = rule if isinstance(rule, tuple) else (rule,) if rule else ()
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        size = 1
+        for a in cand:
+            size *= mesh.shape[a]
+        if not cand or dim % size != 0:
+            # tuple rule: retry with the largest divisible prefix
+            while cand and (size == 0 or dim % size != 0):
+                size //= mesh.shape[cand[-1]]
+                cand = cand[:-1]
+            if not cand or size <= 1 or dim % size != 0:
+                entries.append(None)
+                continue
+        used.update(cand)
+        entries.append(cand if len(cand) > 1 else cand[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(axes_tree, shapes_tree, rules: dict, mesh: Mesh):
+    """Trees: logical axes (tuple leaves) + shapes -> NamedSharding tree."""
+
+    def one(shape, axes):
+        shp = shape.shape if hasattr(shape, "shape") else tuple(shape)
+        return NamedSharding(mesh, spec_for(axes, shp, rules, mesh))
+
+    return jax.tree.map(one, shapes_tree, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (model code stays mesh-agnostic)
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(pcfg: ParallelConfig, mesh: Mesh):
+    """Install activation PartitionSpecs for `constrain` calls in model code.
+
+    hidden  (B, S, d): batch over dp axes, embed over model (TP mode) or
+    batch over the whole mesh (dp_includes_model — small models, no TP).
+    """
+    dp_names = ("pod", "data", "model") if pcfg.dp_includes_model else ("pod", "data")
+    dp = tuple(a for a in dp_names if a in mesh.shape)
+    sp = "model" if (pcfg.seq_shard_activations and "model" in mesh.shape) else None
+    if pcfg.dp_includes_model:
+        specs = {
+            "hidden": P(dp, None, None),
+            "hidden_nosp": P(dp, None, None),
+            "logits": P(dp, None, None),
+            "batch": P(dp),
+        }
+        prev = getattr(_TLS, "specs", None)
+        _TLS.specs = specs
+        try:
+            yield specs
+        finally:
+            _TLS.specs = prev
+        return
+    # NOTE (hillclimb #1, EXPERIMENTS.md §Perf): the scanned carry is sharded
+    # on the *embed* dim over `model`, not on seq.  Seq-sharding triggers
+    # GSPMD "involuntary full rematerialization" on the transitions into the
+    # head-sharded attention internals (replicate-then-repartition), which
+    # blew per-device temp memory to 331 GiB on llama3-405b train; the
+    # embed-sharded carry lowers to plain all-gathers (20 GiB).
+    del sp
+    model = "model" if "model" in mesh.shape else None
+    specs = {
+        "hidden": P(dp, None, model),
+        "hidden_nosp": P(dp, None, None),
+        "logits": P(dp, None, model),
+        "batch": P(dp),
+        # flash-decode (hillclimb): attention decode runs under shard_map
+        # with the KV cache sequence-sharded over this axis and partial
+        # softmax stats combined by psum (see models/attention.py).
+        "decode_sp_axis": model,
+        "dp_axes": dp,
+    }
+    prev = getattr(_TLS, "specs", None)
+    _TLS.specs = specs
+    try:
+        yield specs
+    finally:
+        _TLS.specs = prev
+
+
+def current_rule(kind: str):
+    """Read an installed activation rule (None outside activation_rules)."""
+    specs = getattr(_TLS, "specs", None)
+    return None if specs is None else specs.get(kind)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """with_sharding_constraint if activation rules are installed; else
+    identity (keeps model code runnable on a single device)."""
+    specs = getattr(_TLS, "specs", None)
+    if specs is None or kind not in specs:
+        return x
+    spec = specs[kind]
+    if not isinstance(spec, P):
+        return x
+    # Divisibility guard: fall back to batch-only sharding when the seq/last
+    # dims don't divide (e.g. decode S=1 under SP).
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.shape:
+            return x
+        sizes = dict(mesh.shape)
+    except Exception:
+        return x
+
+    def fit(dim, entry):
+        """Largest dividing suffix of a tuple entry (e.g. batch 256 on
+        ('pod','data','model') = 512 falls back to ('data','model') = 256)."""
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        while axes:
+            need = int(np.prod([sizes.get(a, 1) for a in axes]))
+            if dim % need == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[1:]
+        return None
+
+    entries = list(spec) + [None] * (x.ndim - len(spec))
+    entries = [fit(d, e) for d, e in zip(x.shape, entries)]
+    return jax.lax.with_sharding_constraint(x, P(*entries))

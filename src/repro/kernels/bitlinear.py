@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: bit-packed binary matmul with fused real factor.
+
+Computes  y = (x @ M) @ C  for the integer-decomposition compressed layer
+(paper Eq. 1): per (row-tile r, col-tile c) of the original weight,
+M[r,c] in {-1,+1}^{tn x K} is stored bit-packed (uint8, 8 cols/byte, see
+core.decomposition.pack_bits) and C[r,c] is a small real (K x td) factor.
+
+TPU adaptation (DESIGN.md §4): the win is HBM bandwidth — M's bytes-read are
+16x smaller than a bf16 dense weight.  The kernel streams packed tiles into
+VMEM, unpacks to +-1 in VREGs, feeds the MXU, and fuses the K-dim
+intermediate z = x @ M so it never touches HBM.
+
+Grid (T/bt, c, r) with r as the reduction ("arbitrary") dimension:
+accumulate the (bt, td) output block in a f32 VMEM scratch across r-steps.
+MXU alignment: bt and td should be multiples of 128 on real hardware
+(asserted softly); K and tn are tile-level and may be small.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bitlinear"]
+
+
+def _kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # (bt, tn)
+    mp = mp_ref[0, 0]                    # (tn, kb) uint8
+    c = c_ref[0, 0]                      # (K, td)
+
+    # unpack bits -> {-1, +1} in x.dtype
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, 1, 8), 2)
+    bits = (mp[:, :, None] >> shifts) & jnp.uint8(1)
+    m = bits.reshape(mp.shape[0], mp.shape[1] * 8)[:, :K]
+    m = (2.0 * m.astype(x.dtype) - 1.0)
+
+    z = jnp.dot(x, m, preferred_element_type=jnp.float32)          # (bt, K)
+    acc_ref[...] += jnp.dot(
+        z.astype(c.dtype), c, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(r == n_r - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def bitlinear(
+    x: jax.Array,        # (T, d_in)
+    m_packed: jax.Array, # (r, c, tn, kb) uint8
+    C: jax.Array,        # (r, c, K, td)
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y (T, d_out) = x @ decompress(m_packed, C)."""
+    T, d_in = x.shape
+    n_r, n_c, tn, kb = m_packed.shape
+    _, _, K, td = C.shape
+    assert n_r * tn == d_in, (m_packed.shape, x.shape)
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+
+    grid = (T // bt, n_c, n_r)
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K, n_r=n_r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, tn), lambda t, c, r: (t, r)),
+            pl.BlockSpec((1, 1, tn, kb), lambda t, c, r: (r, c, 0, 0)),
+            pl.BlockSpec((1, 1, K, td), lambda t, c, r: (r, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, td), lambda t, c, r: (t, c)),
+        out_shape=jax.ShapeDtypeStruct((T, n_c * td), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, td), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, m_packed, C)
+    return out

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention
+with GQA head grouping.
+
+Grid (B, H, nq, nk), nk innermost ("arbitrary"): online-softmax state
+(m, l, acc) lives in VMEM scratch and persists across the nk steps of one
+(b, h, i) cell; the output block is written on the last visited kv block.
+K/V blocks are indexed by the *kv head* h // rep, so grouped queries share
+K/V reads (GQA).  Fully-masked (j > i) blocks are skipped by the index map
+only when window-free causal order allows; otherwise masked in-kernel.
+
+Layouts: q (B, H, S, hd), k/v (B, KV, S, hd) -> out (B, H, S, hd).
+Block sizes default to (512, 512) on the (q, kv) sequence dims; hd is kept
+whole (typically 64/128, MXU-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, qc: int, kc: int, nk: int, window: int,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                      # (qc, hd)
+    k = k_ref[0, 0]                      # (kc, hd)
+    v = v_ref[0, 0]                      # (kc, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale   # (qc, kc)
+    q_pos = i * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    k_pos = j * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,   # (B, H, S, hd)
+    k: jax.Array,   # (B, KV, S, hd)
+    v: jax.Array,   # (B, KV, S, hd)
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    qc, kc = min(block_q, S), min(block_k, S)
+    assert S % qc == 0 and S % kc == 0
+    nq, nk = S // qc, S // kc
+    scale = 1.0 / math.sqrt(hd)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, qc=qc, kc=kc, nk=nk, window=window
+        ),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kc, hd), lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, kc, hd), lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qc, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

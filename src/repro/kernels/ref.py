@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps; they are also the CPU/dry-run fallbacks)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bitlinear_ref", "flash_attention_ref", "sa_sweep_ref"]
+
+
+def _unpack(m_packed: jax.Array, K: int, dtype) -> jax.Array:
+    bits = (m_packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    bits = bits.reshape(*m_packed.shape[:-1], m_packed.shape[-1] * 8)[..., :K]
+    return 2 * bits.astype(dtype) - 1
+
+
+def bitlinear_ref(x: jax.Array, m_packed: jax.Array, C: jax.Array) -> jax.Array:
+    """y = (x @ M) @ C, dense reference."""
+    n_r, n_c, tn, kb = m_packed.shape
+    K = C.shape[2]
+    M = _unpack(m_packed, K, jnp.float32)
+    xt = x.reshape(x.shape[0], n_r, tn).astype(jnp.float32)
+    z = jnp.einsum("trn,rcnk->trck", xt, M)
+    y = jnp.einsum("trck,rckd->tcd", z, C.astype(jnp.float32))
+    return y.reshape(x.shape[0], n_c * C.shape[3]).astype(x.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int = 0
+) -> jax.Array:
+    """Plain masked softmax attention. q (B,H,S,hd), k/v (B,KV,S,hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vr)
+
+
+def sa_sweep_ref(h, B, x0, rand, temps):
+    """Sequential-sweep Metropolis SA consuming the same uniforms as the
+    kernel — bit-exact reference."""
+    hf = h.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+
+    def one_chain(x0c, randc):
+        x = x0c.astype(jnp.float32)
+        f = hf + 2.0 * Bf @ x
+
+        def sweep(carry, su):
+            x, f = carry
+            t, u = su
+
+            def spin(i, carry):
+                x, f = carry
+                dE = -2.0 * x[i] * f[i]
+                accept = jnp.logical_or(
+                    dE < 0.0, u[i] < jnp.exp(-dE / jnp.maximum(t, 1e-12))
+                )
+                delta = jnp.where(accept, -2.0 * x[i], 0.0)
+                f = f + 2.0 * Bf[:, i] * delta
+                x = x.at[i].add(delta)
+                return x, f
+
+            x, f = jax.lax.fori_loop(0, x.shape[0], spin, (x, f))
+            return (x, f), None
+
+        (x, _), _ = jax.lax.scan(sweep, (x, f), (temps, randc))
+        e = x @ hf + x @ (Bf @ x)
+        return x, e
+
+    return jax.vmap(one_chain)(x0, rand)

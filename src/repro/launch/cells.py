@@ -1,0 +1,161 @@
+"""Cell builder: one (architecture x input-shape x mesh) dry-run unit.
+
+A *cell* is the jit-able step function of the shape's kind (train_step /
+prefill / decode_step), its ShapeDtypeStruct input stand-ins (no device
+allocation — the dry-run pattern) and the in/out NamedShardings.  Used by
+launch/dryrun.py (lower+compile proof) and benchmarks/roofline.py (cost
+extraction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.launch.presets import parallel_preset
+from repro.models import frontends
+from repro.models.transformer import init_cache, model_dtype
+from repro.optim import warmup_cosine
+from repro.serving.engine import cache_shardings, make_decode_step, make_prefill
+from repro.training.loop import (
+    TrainState,
+    _axes_trees,
+    make_optimizer,
+    make_train_step,
+    state_shardings,
+)
+
+__all__ = ["Cell", "build_cell"]
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    pcfg: ParallelConfig
+    fn: Any                 # step callable (not jitted)
+    args: tuple             # ShapeDtypeStruct trees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    static_argnums: tuple = ()
+
+
+def _dp_spec(mesh: Mesh, ndim: int, batch: int, include_model: bool = False) -> NamedSharding:
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    dp = tuple(a for a in names if a in mesh.shape)
+    # largest dividing suffix (e.g. batch 256 on a 512-way full mesh falls
+    # back to ('data','model') = 256)
+    while dp:
+        size = 1
+        for a in dp:
+            size *= mesh.shape[a]
+        if batch % size == 0:
+            break
+        dp = dp[1:]
+    lead = dp if dp else None
+    return NamedSharding(mesh, P(lead, *([None] * (ndim - 1))))
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, pcfg: ParallelConfig):
+    B, S = shape.global_batch, shape.seq_len
+    inc = pcfg.dp_includes_model
+    if frontends.needs_embeds(cfg):
+        sds = {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), model_dtype(cfg)),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        sh = {"embeds": _dp_spec(mesh, 3, B, inc), "labels": _dp_spec(mesh, 2, B, inc)}
+    else:
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        sh = {"tokens": _dp_spec(mesh, 2, B, inc)}
+    return sds, sh
+
+
+def _param_trees(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh):
+    from repro.distributed import sharding as shd
+
+    shapes, axes = _axes_trees(cfg)
+    rules = shd.make_rules(pcfg)
+    return shapes, shd.param_shardings(axes, shapes, rules, mesh)
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    pcfg: ParallelConfig | None = None,
+    **overrides,
+) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if pcfg is None:
+        pcfg = parallel_preset(cfg, shape, multi_pod="pod" in mesh.shape)
+    if overrides:
+        pcfg = dataclasses.replace(pcfg, **overrides)
+
+    if shape.kind == "train":
+        shapes, axes = _axes_trees(cfg)
+        opt = make_optimizer(pcfg)
+        opt_shapes = jax.eval_shape(opt.init, shapes)
+        state_sds = TrainState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            params=shapes,
+            opt=opt_shapes,
+        )
+        st_sh = state_shardings(cfg, pcfg, mesh)
+        batch_sds, batch_sh = _batch_specs(cfg, shape, mesh, pcfg)
+        fn = make_train_step(cfg, pcfg, warmup_cosine(3e-4, 2000, 100_000))
+        return Cell(
+            arch, shape, cfg, pcfg, fn,
+            args=(state_sds, batch_sds),
+            in_shardings=(st_sh, batch_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+
+    # serving cells.  NOTE (§Perf H10, REFUTED on this backend): unrolled
+    # layer loops + unstacked donated caches were hypothesised to stop the
+    # CPU buffer assigner's 14x copy-multiplication of the scan-carried
+    # cache stack; measured 36->109 GiB (the planner then keeps every
+    # layer's gather buffers alive concurrently).  Scan layout retained;
+    # the capability stays behind make_decode_step(unroll_groups=True).
+    unroll_groups = False
+    p_shapes, p_sh = _param_trees(cfg, pcfg, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, S, stacked=not unroll_groups))
+    cache_sh = cache_shardings(cfg, pcfg, mesh, B, S, stacked=not unroll_groups)
+
+    if shape.kind == "prefill":
+        batch_sds, batch_sh = _batch_specs(cfg, shape, mesh, pcfg)
+        fn = make_prefill(cfg, unroll_groups=unroll_groups)
+        return Cell(
+            arch, shape, cfg, pcfg, fn,
+            args=(p_shapes, batch_sds, cache_sds),
+            in_shardings=(p_sh, batch_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        )
+
+    # decode: one new token per sequence against a seq_len-deep cache
+    if frontends.needs_embeds(cfg):
+        tok_sds = jax.ShapeDtypeStruct((B, cfg.d_model), model_dtype(cfg))
+        tok_sh = _dp_spec(mesh, 2, B)
+    else:
+        tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tok_sh = _dp_spec(mesh, 1, B)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_decode_step(cfg, unroll_groups=unroll_groups)
+    return Cell(
+        arch, shape, cfg, pcfg, fn,
+        args=(p_shapes, tok_sds, cache_sds, pos_sds),
+        in_shardings=(p_sh, tok_sh, cache_sh, NamedSharding(mesh, P())),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )

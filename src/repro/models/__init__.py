@@ -1,0 +1,12 @@
+"""Model zoo: one composable decoder backbone covering all assigned
+architecture families (dense GQA / MoE / SSD / hybrid / audio / vlm)."""
+
+from repro.models.transformer import (
+    forward,
+    init_cache,
+    init_model,
+    model_dtype,
+    train_loss,
+)
+
+__all__ = ["forward", "init_cache", "init_model", "model_dtype", "train_loss"]

@@ -1,0 +1,27 @@
+"""Modality frontends — STUBS per the task spec.
+
+``[audio]`` (musicgen) and ``[vlm]`` (internvl2) architectures specify the
+transformer *backbone* only; the EnCodec tokenizer / InternViT encoder are
+stubbed: ``input_specs()`` provides precomputed frame/patch embeddings of
+shape (B, S, d_model).  For smoke tests and the runnable examples we
+synthesise embeddings deterministically from integer "frame ids" so the
+pipeline is end-to-end runnable without the real encoders.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["stub_embeddings", "needs_embeds"]
+
+
+def needs_embeds(cfg: ModelConfig) -> bool:
+    return cfg.frontend in ("audio_stub", "vision_stub")
+
+
+def stub_embeddings(key, cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Deterministic stand-in for EnCodec frames / InternViT patches."""
+    return 0.02 * jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32).astype(dtype)

@@ -1,0 +1,147 @@
+"""Shared neural-net layers (pure JAX, no framework dependencies)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantized
+from repro.models.params import Param, dense_init, param
+
+__all__ = [
+    "rms_norm",
+    "init_rms_norm",
+    "apply_dense",
+    "init_dense",
+    "init_embedding",
+    "embed_lookup",
+    "init_mlp",
+    "mlp",
+    "softmax_cross_entropy",
+]
+
+
+def init_rms_norm(d: int, dtype) -> dict:
+    return {"scale": param(jnp.ones((d,), jnp.float32), ("embed",))}
+
+
+def rms_norm(x: jax.Array, p: dict, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, axes, dtype, use_bias: bool = False) -> dict:
+    p = {"w": dense_init(key, (d_in, d_out), axes, dtype)}
+    if use_bias:
+        p["b"] = param(jnp.zeros((d_out,), dtype), (axes[1],))
+    return p
+
+
+def apply_dense(x: jax.Array, p: dict) -> jax.Array:
+    """Dense layer; transparently handles integer-decomposition-compressed
+    weights (the paper's technique) produced by ``repro.core.compress``."""
+    w = p["w"].value if isinstance(p["w"], Param) else p["w"]
+    if quantized.is_compressed(w):
+        y = quantized.apply_compressed(x, w)
+    else:
+        y = x @ w
+    if "b" in p:
+        b = p["b"].value if isinstance(p["b"], Param) else p["b"]
+        y = y + b
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    v = jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+    return {"table": param(v.astype(dtype), ("vocab", "embed"))}
+
+
+def embed_lookup(tokens: jax.Array, p: dict) -> jax.Array:
+    table = p["table"].value if isinstance(p["table"], Param) else p["table"]
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, use_bias: bool = False) -> dict:
+    """SwiGLU MLP (gate, up, down)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d, d_ff, ("embed", "mlp"), dtype, use_bias),
+        "up": init_dense(k2, d, d_ff, ("embed", "mlp"), dtype, use_bias),
+        "down": init_dense(k3, d_ff, d, ("mlp", "embed"), dtype, use_bias),
+    }
+
+
+def mlp(x: jax.Array, p: dict) -> jax.Array:
+    g = apply_dense(x, p["gate"])
+    u = apply_dense(x, p["up"])
+    return apply_dense(jax.nn.silu(g) * u, p["down"])
+
+
+def chunked_softmax_cross_entropy(
+    h: jax.Array,        # (B, T, d) final hidden states (post final-norm)
+    head_w: jax.Array,   # (d, V)
+    labels: jax.Array,   # (B, T) int32
+    mask: jax.Array,     # (B, T)
+    z_loss: float = 0.0,
+    softcap: float = 0.0,
+    chunk: int = 512,
+):
+    """CE computed per sequence chunk with remat: the (B, T, V) fp32 logits
+    tensor is never materialised (zamba2 train: ~3 GiB/device saved;
+    EXPERIMENTS.md §Perf).  Numerically identical to the dense path."""
+    B, T, d = h.shape
+    ck = min(chunk, T)
+    pad = (-T) % ck
+    if pad:  # odd T (e.g. S-1 after the next-token shift): pad with mask 0
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        T += pad
+    nc = T // ck
+    hc = h.reshape(B, nc, ck, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, ck).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, ck).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hs, ls, ms = xs
+        logits = (hs @ head_w).astype(jnp.float32)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        ce = lse - picked
+        if z_loss > 0.0:
+            ce = ce + z_loss * lse**2
+        return (carry[0] + jnp.sum(ce * ms), carry[1] + jnp.sum(ms)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    z_loss: float = 0.0,
+    softcap: float = 0.0,
+):
+    """Mean CE over masked tokens, fp32, with optional z-loss and softcap.
+
+    logits (..., V) any float dtype; labels (...) int32; mask (...) {0,1}.
+    """
+    lf = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        lf = softcap * jnp.tanh(lf / softcap)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = lse - picked
+    if z_loss > 0.0:
+        ce = ce + z_loss * lse**2
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce * mask) / denom

@@ -1,0 +1,55 @@
+"""Parameter pytrees with logical sharding axes.
+
+Every parameter is created through :func:`param`, which records a tuple of
+*logical axis names* alongside the value.  ``split`` separates a model pytree
+into (values, axes-specs); ``repro.distributed.sharding`` maps logical axes
+to mesh axes to produce ``NamedSharding``s.  This keeps model code free of
+mesh knowledge (MaxText-style logical axis rules).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Param", "param", "dense_init", "split", "merge", "count"]
+
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: tuple  # logical axis names (len == value.ndim); None entries allowed
+
+
+def param(value: jax.Array, axes: tuple) -> Param:
+    assert len(axes) == value.ndim, (axes, value.shape)
+    return Param(value, axes)
+
+
+def dense_init(key, shape, axes, dtype, scale: float | None = None) -> Param:
+    """Truncated-normal fan-in init (scale defaults to 1/sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = fan_in ** -0.5
+    v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return param(v.astype(dtype), axes)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split(tree):
+    """params-with-axes pytree -> (values pytree, axes pytree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def merge(values, axes):
+    return jax.tree.map(Param, values, axes)
+
+
+def count(values) -> int:
+    return sum(v.size for v in jax.tree.leaves(values))

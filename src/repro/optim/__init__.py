@@ -1,0 +1,12 @@
+from repro.optim.adamw import Optimizer, adafactor, adamw, clip_by_global_norm, global_norm
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "clip_by_global_norm",
+    "global_norm",
+    "warmup_cosine",
+    "constant",
+]

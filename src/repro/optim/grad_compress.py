@@ -1,0 +1,56 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At multi-pod scale the gradient all-reduce over the ``pod`` axis crosses the
+slow data-centre interconnect; compressing it 4x (fp32 accum -> int8 + per-
+tensor scale) cuts that traffic proportionally.  Error feedback (Seide et
+al.; Karimireddy et al. 2019) keeps the quantisation residual in the
+optimiser state and re-injects it next step, preserving convergence.
+
+Usage (training/loop.py, optional): gradients are quantised *before* the
+pod-axis psum inside a shard_map over 'pod', and dequantised after; the
+residual tree lives in TrainState.  The quantise/dequantise pair here is
+solver-agnostic and unit-tested for the error-feedback contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress", "ef_residual_zeros"]
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantisation: returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_residual_zeros(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress(grads, residual):
+    """Error-feedback compression of a gradient tree.
+
+    Returns (quantised tree of (q, scale), new_residual).  The caller
+    all-reduces the int8 payload (sum of int32 accumulate) and dequantises.
+    """
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize_int8(target)
+        recon = dequantize_int8(q, s)
+        return (q, s), target - recon
+
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat, rflat)]
+    qtree = treedef.unflatten([o[0] for o in outs])
+    new_res = treedef.unflatten([o[1] for o in outs])
+    return qtree, new_res

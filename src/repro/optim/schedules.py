@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def constant(peak_lr: float):
+    return lambda step: jnp.full((), peak_lr, jnp.float32)

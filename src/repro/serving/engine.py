@@ -1,0 +1,138 @@
+"""Serving: batched prefill + decode with sharded KV/SSM caches.
+
+``serve_step`` (single-token decode over a batch of sequences) is the unit
+the decode_* dry-run cells lower.  The cache layout under pjit:
+
+  KV cache (B, S, KV, hd): batch over (pod, data); *sequence* over model
+  (SP/flash-decode style — kv_heads=8 rarely divides a 16-way model axis);
+  the sharded-softmax collectives are inserted by XLA SPMD.
+  SSM state (B, nh, hp, ds): batch over dp, heads over model when divisible.
+
+The Engine class is the single-host driver used by examples/: greedy or
+temperature sampling, EOS handling, simple continuous batching (a finished
+slot is refilled from the queue; the cache slot is re-prefilled).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import forward, init_cache
+from repro.models.frontends import needs_embeds
+
+__all__ = ["make_decode_step", "make_prefill", "cache_shardings", "Engine"]
+
+
+def cache_shardings(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh, batch: int,
+                    max_len: int, stacked: bool = True):
+    """NamedSharding tree matching models.init_cache output."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model = "model" if "model" in mesh.shape else None
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len, stacked=stacked))
+
+    def spec_for_leaf(path, leaf):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        is_stacked = stacked and "groups" in names   # leading group dim
+        lead = (None,) if is_stacked else ()
+        nd = len(leaf.shape) - len(lead)
+        # batch shards over dp only when divisible (long_500k has B=1)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        bshard = dp if leaf.shape[len(lead)] % max(dp_size, 1) == 0 else None
+        if names[-1] in ("k", "v"):            # (B, S, KV, hd)
+            seq = model if leaf.shape[len(lead) + 1] % mesh.shape.get("model", 1) == 0 else None
+            return P(*lead, bshard, seq, None, None)
+        if names[-1] == "state":               # (B, nh, hp, ds)
+            nh = leaf.shape[len(lead) + 1]
+            hshard = model if model and nh % mesh.shape["model"] == 0 else None
+            return P(*lead, bshard, hshard, None, None)
+        if names[-1] == "conv":                # (B, dconv-1, conv_dim)
+            ch = leaf.shape[len(lead) + 2]
+            cshard = model if model and ch % mesh.shape["model"] == 0 else None
+            return P(*lead, bshard, None, cshard)
+        return P(*lead, bshard, *([None] * (nd - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [NamedSharding(mesh, spec_for_leaf(p, l)) for p, l in flat]
+    )
+
+
+def make_prefill(cfg: ModelConfig, unroll_groups: bool = False):
+    """prefill(params, inputs, cache) -> (last_logits (B,V), cache)."""
+
+    def prefill(params, inputs, cache):
+        logits, cache, _ = forward(
+            params, inputs, cfg, cache=cache, pos_offset=0, last_only=True,
+            unroll_groups=unroll_groups,
+        )
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, unroll_groups: bool = False):
+    """decode_step(params, token (B,) or embed (B,d), cache, pos) ->
+    (logits (B,V), cache).  ``pos`` is the index the new token is written to
+    (scalar; continuous batching with ragged positions is handled by the
+    Engine via per-slot pos when needed — dry-run lowers the scalar form).
+
+    ``unroll_groups``: python-unrolled layer loop + unstacked caches — the
+    production serving layout for big models (EXPERIMENTS.md §Perf H10)."""
+
+    def decode_step(params, tok, cache, pos):
+        if needs_embeds(cfg):
+            inputs = {"embeds": tok[:, None, :]}
+        else:
+            inputs = {"tokens": tok[:, None]}
+        logits, cache, _ = forward(
+            params, inputs, cfg, cache=cache, pos_offset=pos,
+            unroll_groups=unroll_groups,
+        )
+        return logits[:, 0], cache
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Engine:
+    """Single-host batched serving driver (examples / integration tests)."""
+
+    cfg: ModelConfig
+    params: dict
+    max_len: int
+    batch: int
+    temperature: float = 0.0
+    eos_id: int = 1
+
+    def __post_init__(self):
+        self.prefill = jax.jit(make_prefill(self.cfg))
+        self.decode = jax.jit(make_decode_step(self.cfg))
+
+    def generate(self, prompts: jax.Array, steps: int, key=None) -> jax.Array:
+        """prompts (B, P) int32 -> (B, P+steps) greedy/sampled tokens."""
+        B, Plen = prompts.shape
+        cache = init_cache(self.cfg, B, self.max_len)
+        last, cache = self.prefill(self.params, {"tokens": prompts}, cache)
+        toks = [prompts]
+        cur = self._pick(last, key, 0)
+        for t in range(steps):
+            toks.append(cur[:, None])
+            if t == steps - 1:
+                break
+            logits, cache = self.decode(self.params, cur, cache, Plen + t)
+            cur = self._pick(logits, key, t + 1)
+        return jnp.concatenate(toks, axis=1)
+
+    def _pick(self, logits, key, t):
+        if self.temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, t)
+        return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)

@@ -1,0 +1,15 @@
+from repro.training.loop import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    state_shardings,
+    batch_sharding,
+)
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "state_shardings",
+    "batch_sharding",
+]

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — tests see the real
+single CPU device; multi-device behaviour is tested via subprocesses in
+test_multidevice.py (the dry-run alone uses 512 virtual devices)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,58 @@
+"""Symmetry/orbit machinery + brute-force consistency on tiny instances."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decomposition as dec
+from repro.core import symmetry
+from repro.core.bruteforce import brute_force, exact_solutions
+
+
+def test_orbit_size_and_uniqueness():
+    M = jnp.sign(jax.random.normal(jax.random.PRNGKey(0), (5, 3)))
+    M = jnp.where(M == 0, 1.0, M)
+    O = np.asarray(symmetry.orbit(M))
+    assert O.shape == (48, 5, 3)
+    flat = {o.tobytes() for o in ((O > 0).astype(np.uint8))}
+    assert len(flat) == 48  # generic M: all orbit members distinct
+
+
+def test_canonical_key_identifies_orbit():
+    M = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (4, 2)))
+    M = jnp.where(M == 0, 1.0, M)
+    keys = {symmetry.canonical_key(np.asarray(o)) for o in symmetry.orbit(M)}
+    assert len(keys) == 1
+    M2 = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (4, 2)))
+    M2 = jnp.where(M2 == 0, 1.0, M2)
+    assert symmetry.canonical_key(np.asarray(M2)) not in keys
+
+
+def test_bruteforce_tiny_matches_exhaustive_numpy():
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (3, 7)))
+    res = brute_force(W, K=2, chunk=64)
+    # exhaustive check in numpy
+    best = np.inf
+    for code in range(2 ** 6):
+        bits = [(code >> i) & 1 for i in range(6)]
+        M = (2 * np.array(bits, np.float32) - 1).reshape(3, 2)
+        c = float(dec.objective(jnp.asarray(M), jnp.asarray(W)))
+        best = min(best, c)
+    assert np.isclose(res.best_cost, best, rtol=1e-5, atol=1e-6)
+    sols = exact_solutions(res)
+    # orbit size K!*2^K = 8 (some may coincide for degenerate M)
+    assert 1 <= sols.shape[0] <= 8
+    # second best is strictly worse
+    assert res.second_cost > res.best_cost * (1 + 1e-6)
+
+
+def test_domain_assignment_is_orbit_consistent():
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(4), (4, 10)))
+    res = brute_force(W, K=2, chunk=256)
+    sols = exact_solutions(res)
+    if sols.shape[0] < 4:
+        return  # degenerate instance; nothing to cluster
+    labels = symmetry.cluster_exact_solutions(sols, num_domains=2)
+    X = sols.reshape(sols.shape[0], -1)
+    assigned = symmetry.assign_domains(X, sols, labels)
+    np.testing.assert_array_equal(assigned, labels)

@@ -1,0 +1,115 @@
+"""Unit + property tests for the integer-decomposition core (paper Eq. 1-9)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decomposition as dec
+from repro.core import symmetry
+from repro.core.instances import shrunk_vgg_instance
+
+SETTINGS = dict(deadline=None, max_examples=20,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand_W(seed, N=6, D=12):
+    return jax.random.normal(jax.random.PRNGKey(seed), (N, D))
+
+
+def rand_M(seed, N=6, K=3):
+    m = jnp.sign(jax.random.normal(jax.random.PRNGKey(seed ^ 0xBEEF), (N, K)))
+    return jnp.where(m == 0, 1.0, m)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(st.integers(0, 1000))
+def test_gram_objective_matches_naive(seed):
+    W, M = rand_W(seed), rand_M(seed)
+    C = dec.least_squares_C(M, W)
+    naive = jnp.sum((W - M @ C) ** 2)
+    assert np.isclose(float(dec.objective(M, W)), float(naive), rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(st.integers(0, 1000))
+def test_least_squares_C_is_optimal(seed):
+    """Any perturbation of C*(M) cannot lower the cost (Eq. 6)."""
+    W, M = rand_W(seed), rand_M(seed)
+    C = dec.least_squares_C(M, W)
+    base = float(jnp.sum((W - M @ C) ** 2))
+    for i in range(3):
+        dC = 0.1 * jax.random.normal(jax.random.PRNGKey(seed + i), C.shape)
+        perturbed = float(jnp.sum((W - M @ (C + dC)) ** 2))
+        assert perturbed >= base - 1e-5
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(st.integers(0, 1000))
+def test_objective_invariant_under_symmetry_orbit(seed):
+    """L(M) is identical across all K! * 2^K orbit members."""
+    W, M = rand_W(seed), rand_M(seed)
+    base = float(dec.objective(M, W))
+    orb = symmetry.orbit(M)
+    assert orb.shape[0] == symmetry.orbit_size(3) == 48
+    costs = jax.vmap(lambda m: dec.objective(m, W))(orb)
+    np.testing.assert_allclose(np.asarray(costs), base, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(st.integers(1, 64), st.integers(0, 50))
+def test_pack_unpack_roundtrip(K, seed):
+    M = np.sign(np.random.default_rng(seed).standard_normal((5, K)))
+    M[M == 0] = 1
+    P = dec.pack_bits(jnp.asarray(M, jnp.float32))
+    M2 = dec.unpack_bits(P, K)
+    assert P.dtype == jnp.uint8 and P.shape == (5, -(-K // 8))
+    np.testing.assert_array_equal(np.asarray(M2), M)
+
+
+def test_greedy_monotone_nonincreasing():
+    W = shrunk_vgg_instance(1)
+    prev = float(jnp.sum(W * W))
+    for K in (1, 2, 3, 4):
+        g = dec.greedy_decompose(W, K)
+        assert float(g.cost) <= prev + 1e-6
+        prev = float(g.cost)
+        # refit never hurts
+        assert float(g.cost_refit) <= float(g.cost) + 1e-6
+
+
+def test_alternating_beats_or_matches_greedy():
+    for seed in range(3):
+        W = shrunk_vgg_instance(seed)
+        g = dec.greedy_decompose(W, 3)
+        _, _, alt_cost = dec.alternating_decompose(W, 3, M0=g.M)
+        assert float(alt_cost) <= float(g.cost_refit) + 1e-6
+
+
+def test_objective_zero_when_K_equals_N():
+    """K = N reproduces W exactly (paper Eq. 2)."""
+    W = rand_W(0, N=4, D=8)
+    M = dec.sign_enumeration(4)[:4] * 0 + jnp.eye(4) * 2 - 1  # any full-rank binary
+    M = jnp.sign(jax.random.normal(jax.random.PRNGKey(5), (4, 4)))
+    # ensure invertible; if not, resample
+    while abs(float(jnp.linalg.det(M))) < 1e-3:
+        M = jnp.sign(jax.random.normal(jax.random.PRNGKey(6), (4, 4)))
+    assert float(dec.objective(M, W)) < 1e-6
+
+
+def test_residual_error_measure():
+    W = shrunk_vgg_instance(0)
+    M = rand_M(3, N=8, K=3)
+    exact_norm = jnp.asarray(0.3)
+    re = dec.residual_error(M, W, exact_norm)
+    expected = (jnp.sqrt(dec.objective(M, W)) - 0.3) / jnp.linalg.norm(W)
+    assert np.isclose(float(re), float(expected), rtol=1e-5)
+
+
+def test_sign_enumeration():
+    E = dec.sign_enumeration(3)
+    assert E.shape == (8, 3)
+    assert len({tuple(r) for r in np.asarray(E).tolist()}) == 8
+    assert set(np.unique(np.asarray(E))) == {-1.0, 1.0}

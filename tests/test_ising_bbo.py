@@ -1,0 +1,152 @@
+"""Ising solvers + BBO loop: the paper's optimisation machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bbo as bbo_lib
+from repro.core import decomposition as dec
+from repro.core import features, ising, surrogate
+from repro.core.bruteforce import brute_force
+
+
+def small_ising(seed, n=8):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    h = jax.random.normal(k1, (n,))
+    B = jax.random.normal(k2, (n, n)) * 0.3
+    B = (B + B.T) / 2
+    B = B - jnp.diag(jnp.diag(B))
+    return h, B
+
+
+def exhaustive_min(h, B):
+    n = h.shape[0]
+    X = dec.sign_enumeration(n)
+    E = jax.vmap(lambda x: ising.ising_energy(x, h, B))(X)
+    return float(jnp.min(E))
+
+
+@pytest.mark.parametrize("solver", ["sa", "sq", "qa"])
+def test_solvers_reach_ground_state_small(solver):
+    hits = 0
+    for seed in range(5):
+        h, B = small_ising(seed)
+        e0 = exhaustive_min(h, B)
+        kw = dict(num_sweeps=64, num_reads=10) if solver != "qa" else dict(num_sweeps=48, num_reads=10)
+        _, e = ising.solve(solver, jax.random.PRNGKey(seed), h, B, **kw)
+        assert float(e) >= e0 - 1e-4  # never below the true minimum
+        hits += float(e) <= e0 + 1e-4
+    # stochastic heuristics: require a strong majority, not perfection
+    assert hits >= 3, f"{solver} found ground state only {hits}/5 times"
+
+
+def test_sa_energy_decreases_from_start():
+    h, B = small_ising(42, n=16)
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.rademacher(key, (16,), dtype=h.dtype)
+    e0 = ising.ising_energy(x0, h, B)
+    _, e = ising.solve_sa(key, h, B, num_sweeps=32, num_reads=4)
+    assert float(e) <= float(e0)
+
+
+def test_features_and_ising_roundtrip():
+    n = 5
+    alpha = jax.random.normal(jax.random.PRNGKey(1), (features.num_features(n),))
+    h, B = features.coeffs_to_ising(alpha, n)
+    # quadratic model value == feature dot product for random x
+    for seed in range(5):
+        x = jax.random.rademacher(jax.random.PRNGKey(seed), (n,), dtype=jnp.float32)
+        lhs = float(alpha @ features.featurize(x))
+        rhs = float(alpha[0] + x @ h + x @ (B @ x))
+        assert np.isclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_incremental_stats_match_batch():
+    n = 6
+    X = jax.random.rademacher(jax.random.PRNGKey(0), (20, n), dtype=jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (20,))
+    stats = surrogate.init_stats(n)
+    for i in range(20):
+        stats = surrogate.update_stats(stats, X[i], y[i])
+    Phi = jax.vmap(features.featurize)(X)
+    np.testing.assert_allclose(np.asarray(stats.G), np.asarray(Phi.T @ Phi), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(stats.F), np.asarray(Phi.T @ y), rtol=1e-4, atol=1e-4)
+    assert np.isclose(float(stats.count), 20)
+
+
+def test_nbocs_recovers_known_quadratic():
+    """Sampling posterior mean should approach the generating coefficients."""
+    n = 5
+    p = features.num_features(n)
+    alpha_true = jax.random.normal(jax.random.PRNGKey(7), (p,))
+    X = jax.random.rademacher(jax.random.PRNGKey(8), (400, n), dtype=jnp.float32)
+    Phi = jax.vmap(features.featurize)(X)
+    y = Phi @ alpha_true
+    stats = surrogate.init_stats(n)
+    for i in range(400):
+        stats = surrogate.update_stats(stats, X[i], y[i])
+    draws = jnp.stack([
+        surrogate.sample_nbocs(jax.random.PRNGKey(i), stats, sigma2=10.0)
+        for i in range(8)
+    ])
+    mean = jnp.mean(draws, axis=0)
+    # y was standardised inside; compare directions
+    cos = float(mean @ alpha_true / (jnp.linalg.norm(mean) * jnp.linalg.norm(alpha_true)))
+    assert cos > 0.98
+
+
+def test_fm_surrogate_learns():
+    n = 6
+    X = jax.random.rademacher(jax.random.PRNGKey(0), (64, n), dtype=jnp.float32)
+    y = jnp.sum(X[:, :2], axis=1) * X[:, 3]
+    mask = jnp.ones((64,))
+    fm = surrogate.init_fm(jax.random.PRNGKey(1), n, 4)
+    pred0 = surrogate.fm_predict(fm.w0, fm.w, fm.V, X)
+    fm = surrogate.train_fm(fm, X, y, mask, jax.random.PRNGKey(2), steps=300)
+    pred1 = surrogate.fm_predict(fm.w0, fm.w, fm.V, X)
+    ystd = (y - y.mean()) / y.std()
+    assert float(jnp.mean((pred1 - ystd) ** 2)) < float(jnp.mean((pred0 - ystd) ** 2)) * 0.5
+
+
+@pytest.mark.slow
+def test_bbo_finds_exact_solution_small_instance():
+    """End-to-end paper validation at reduced scale: N=4, K=2 (n=8 spins,
+    256 candidates) — nBOCS must find the brute-force optimum."""
+    W = jax.random.normal(jax.random.PRNGKey(3), (4, 20))
+    res = brute_force(np.asarray(W), K=2, chunk=256)
+    f = dec.make_objective(W, 2)
+    cfg = bbo_lib.BBOConfig(n=8, N=4, K=2, algo="nbocs", solver="sa",
+                            iters=60, init_points=8)
+    out = bbo_lib.run_bbo_batch(jax.random.PRNGKey(0), cfg, f, 3)
+    assert float(jnp.min(out.best_y)) <= res.best_cost * (1 + 1e-5)
+
+
+@pytest.mark.slow
+def test_bbo_nbocs_beats_random_search():
+    W = jax.random.normal(jax.random.PRNGKey(4), (5, 30))
+    f = dec.make_objective(W, 2)
+    base = dict(n=10, N=5, K=2, iters=80, init_points=10)
+    nb = bbo_lib.run_bbo_batch(
+        jax.random.PRNGKey(1), bbo_lib.BBOConfig(algo="nbocs", **base), f, 4
+    )
+    rs = bbo_lib.run_bbo_batch(
+        jax.random.PRNGKey(1), bbo_lib.BBOConfig(algo="rs", **base), f, 4
+    )
+    assert float(jnp.mean(nb.best_y)) <= float(jnp.mean(rs.best_y)) + 1e-6
+
+
+def test_augmentation_appends_orbit_with_equal_costs():
+    W = jax.random.normal(jax.random.PRNGKey(5), (4, 12))
+    f = dec.make_objective(W, 2)
+    cfg = bbo_lib.BBOConfig(n=8, N=4, K=2, algo="rs", iters=3, init_points=4,
+                            augment=True)
+    out = bbo_lib.run_bbo(jax.random.PRNGKey(2), cfg, f)
+    count = int(out.count)
+    assert count == 4 + 3 * 8  # K! * 2^K = 2 * 4 = 8 per iteration
+    X, y = np.asarray(out.X)[:count], np.asarray(out.y)[:count]
+    # each appended orbit shares the evaluated cost
+    for i in range(4, count, 8):
+        np.testing.assert_allclose(y[i : i + 8], y[i], rtol=1e-5)
+        costs = [float(f(jnp.asarray(x))) for x in X[i : i + 8]]
+        np.testing.assert_allclose(costs, y[i], rtol=1e-3, atol=1e-5)
