@@ -9,6 +9,8 @@ designed around (DESIGN.md §4).
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -80,7 +82,66 @@ def bench_sa_throughput() -> None:
          f"reads={reads};sweeps={sweeps};spin_updates_per_s={reads*sweeps*n/(us*1e-6):.2e}")
 
 
+def _best_of(fn, *args, repeats=5, iters=3):
+    """Min-of-``repeats`` mean over ``iters`` calls, in microseconds."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def bench_ising_suite() -> list:
+    """jnp vs Pallas backends of ``ising.solve_many`` across (n, problems,
+    chains, sweeps) — the batched SA solve that dominates tile-scale
+    compression.  Writes BENCH_ising.json at the repo root."""
+    from repro.core import ising
+
+    cases = [
+        # (n, problems, reads, sweeps)
+        (16, 64, 4, 24),
+        (32, 64, 4, 24),
+        (64, 64, 4, 24),
+        (32, 128, 8, 32),
+    ]
+    interpret = jax.default_backend() != "tpu"
+    results = []
+    for n, P, reads, sweeps in cases:
+        probs = ising.random_problems(jax.random.PRNGKey(n + P), P, n, scale=0.2)
+        key = jax.random.PRNGKey(0)
+        row = {"solver": "sa", "n": n, "problems": P, "reads": reads,
+               "sweeps": sweeps}
+        for backend in ("jnp", "pallas"):
+            fn = lambda k, b=backend: ising.solve_many(
+                "sa", k, probs, num_sweeps=sweeps, num_reads=reads, backend=b
+            )
+            us = _best_of(fn, key)
+            row[f"{backend}_us"] = us
+            chains = P * reads
+            row[f"{backend}_spin_updates_per_s"] = chains * sweeps * n / (us * 1e-6)
+            emit(f"ising_sa_{backend}_n{n}_p{P}", us,
+                 f"reads={reads};sweeps={sweeps}")
+        row["pallas_speedup"] = row["jnp_us"] / row["pallas_us"]
+        results.append(row)
+
+    out = {
+        "suite": "ising",
+        "device": jax.default_backend(),
+        "pallas_mode": "interpret" if interpret else "compiled",
+        "results": results,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_ising.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2)
+    return results
+
+
 def run_all() -> None:
     bench_compressed_matmul()
     bench_flash_ref()
     bench_sa_throughput()
+    bench_ising_suite()

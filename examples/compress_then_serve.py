@@ -22,7 +22,7 @@ from repro.configs.base import CompressionConfig, ParallelConfig, ShapeConfig
 from repro.core.compress import compress_params
 from repro.data.pipeline import make_pipeline
 from repro.distributed.sharding import activation_rules
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.optim import warmup_cosine
 from repro.serving.engine import Engine
 from repro.training import init_train_state, make_train_step, state_shardings
@@ -48,7 +48,7 @@ def main():
     sh = state_shardings(cfg, pcfg, mesh)
     fn = make_train_step(cfg, pcfg, warmup_cosine(3e-3, 10, args.train_steps))
     pipe = make_pipeline(cfg, shape, mesh)
-    with jax.set_mesh(mesh), activation_rules(pcfg, mesh):
+    with set_mesh(mesh), activation_rules(pcfg, mesh):
         jstep = jax.jit(fn, in_shardings=(sh, None), out_shardings=(sh, None),
                         donate_argnums=0)
         for i in range(args.train_steps):

@@ -1,0 +1,28 @@
+"""jax version shims shared across layers (training, launch, tests).
+
+Kernel-specific Pallas shims live in ``repro.kernels._compat``; this module
+holds the mesh/sharding surface that moved between jax 0.4.x and newer
+releases.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4.x; older jax defaults to Auto anyway
+    from jax.sharding import AxisType
+
+    def axis_types_kw(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pragma: no cover - exercised on jax<=0.4
+    def axis_types_kw(n: int) -> dict:
+        return {}
+
+__all__ = ["axis_types_kw", "set_mesh"]
+
+
+def set_mesh(mesh: Mesh):
+    """``jax.set_mesh`` where available; on older jax a ``Mesh`` is itself
+    the context manager that installs the global mesh."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh

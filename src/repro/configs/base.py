@@ -35,6 +35,7 @@ class CompressionConfig:
     min_size: int = 1 << 16    # only compress matrices with >= this many elems
     optimizer: str = "alternating"  # greedy | alternating | bbo (refinement)
     bbo_iters: int = 64        # only for optimizer="bbo"
+    solver_backend: str = "auto"    # Ising backend for bbo: auto | pallas | jnp
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,7 +28,14 @@ import jax.numpy as jnp
 from repro.core import features as feat
 from repro.core import ising, surrogate, symmetry
 
-__all__ = ["BBOConfig", "BBOResult", "run_bbo", "run_bbo_batch", "paper_iterations"]
+__all__ = [
+    "BBOConfig",
+    "BBOResult",
+    "run_bbo",
+    "run_bbo_batch",
+    "run_bbo_many",
+    "paper_iterations",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +57,7 @@ class BBOConfig:
     gibbs_steps: int = 4        # horseshoe Gibbs sweeps per iteration
     num_reads: int = 10         # Ising restarts per iteration (paper: 10)
     num_sweeps: int = 64        # Ising sweeps per read
+    backend: str = "auto"       # Ising solver backend: auto | pallas | jnp
     dtype: object = jnp.float32
 
     def resolved(self) -> "BBOConfig":
@@ -128,30 +136,46 @@ def _dedupe(key, state: _State, x: jax.Array) -> jax.Array:
     return jnp.where(dup, x.at[i].multiply(-1.0), x)
 
 
-def _propose(key, state: _State, cfg: BBOConfig):
-    """Surrogate fit + Thompson sample + Ising solve -> candidate x."""
-    k_fit, k_solve = jax.random.split(key)
+def _sample_ising(key, state: _State, cfg: BBOConfig):
+    """Surrogate fit + Thompson sample -> one Ising instance (h, B).
+
+    Pure per-problem function: ``run_bbo_many`` vmaps it over the problem
+    axis and hands the stacked (h, B) to one batched ``ising.solve_many``."""
     hs, fm = state.hs, state.fm
-    if cfg.algo == "rs":
-        x = jax.random.rademacher(k_solve, (cfg.n,), dtype=cfg.dtype)
-        return x, state
     if cfg.algo == "nbocs":
-        alpha = surrogate.sample_nbocs(k_fit, state.stats, cfg.sigma2)
+        alpha = surrogate.sample_nbocs(key, state.stats, cfg.sigma2)
         h, B = feat.coeffs_to_ising(alpha, cfg.n)
     elif cfg.algo == "gbocs":
-        alpha = surrogate.sample_gbocs(k_fit, state.stats, b0=cfg.beta)
+        alpha = surrogate.sample_gbocs(key, state.stats, b0=cfg.beta)
         h, B = feat.coeffs_to_ising(alpha, cfg.n)
     elif cfg.algo == "vbocs":
-        alpha, hs = surrogate.sample_vbocs(k_fit, state.stats, state.hs, cfg.gibbs_steps)
+        alpha, hs = surrogate.sample_vbocs(key, state.stats, state.hs, cfg.gibbs_steps)
         h, B = feat.coeffs_to_ising(alpha, cfg.n)
     elif cfg.algo == "fmqa":
         mask = (jnp.arange(state.X.shape[0]) < state.count).astype(cfg.dtype)
-        fm = surrogate.train_fm(state.fm, state.X, state.y, mask, k_fit, cfg.fm_steps)
+        fm = surrogate.train_fm(state.fm, state.X, state.y, mask, key, cfg.fm_steps)
         h, B = surrogate.fm_to_ising(fm)
     else:  # pragma: no cover - guarded by config validation
         raise ValueError(f"unknown algo {cfg.algo}")
-    x, _ = ising.solve(cfg.solver, k_solve, h, B, num_sweeps=cfg.num_sweeps, num_reads=cfg.num_reads)
-    return x, state._replace(hs=hs, fm=fm)
+    return (h, B), state._replace(hs=hs, fm=fm)
+
+
+def _propose(key, state: _State, cfg: BBOConfig):
+    """Surrogate fit + Thompson sample + Ising solve -> candidate x."""
+    k_fit, k_solve = jax.random.split(key)
+    if cfg.algo == "rs":
+        x = jax.random.rademacher(k_solve, (cfg.n,), dtype=cfg.dtype)
+        return x, state
+    (h, B), state = _sample_ising(k_fit, state, cfg)
+    x, _ = ising.solve_many(
+        cfg.solver,
+        k_solve,
+        ising.IsingProblem(h[None], B[None]),
+        num_sweeps=cfg.num_sweeps,
+        num_reads=cfg.num_reads,
+        backend=cfg.backend,
+    )
+    return x[0].astype(cfg.dtype), state
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "f"))
@@ -212,3 +236,91 @@ def run_bbo_batch(key: jax.Array, cfg: BBOConfig, f: Callable, num_runs: int) ->
     for RS), vmapped into one XLA program."""
     keys = jax.random.split(key, num_runs)
     return jax.vmap(lambda k: run_bbo(k, cfg, f))(keys)
+
+
+def run_bbo_many(
+    key: jax.Array, cfg: BBOConfig, f_batch: Callable, num_problems: int
+) -> BBOResult:
+    """Optimise ``num_problems`` independent instances in lock-step — the
+    production tile fan-out (core/compress.py).
+
+    ``f_batch`` maps a stacked candidate batch ``(P, n) -> (P,)`` costs.
+    Unlike ``vmap(run_bbo)``, each iteration fits the P surrogates under
+    vmap but issues a *single* batched ``ising.solve_many`` call, so all
+    P x num_reads annealing chains run as one flattened chain axis (one
+    Pallas program on TPU) instead of P sequential per-spin loops.
+
+    Returns a ``BBOResult`` with a leading problem axis.  Traces eagerly;
+    callers on a hot path should wrap it (with ``cfg``/``f_batch``/
+    ``num_problems`` static) in ``jax.jit``.
+    """
+    cfg = cfg.resolved()
+    P, n, dtype = num_problems, cfg.n, cfg.dtype
+    mp = cfg.max_points
+
+    k_init, k_fm, k_loop = jax.random.split(key, 3)
+    X0 = jax.random.rademacher(k_init, (P, cfg.init_points, n), dtype=dtype)
+    y0 = jax.vmap(f_batch, in_axes=1, out_axes=1)(X0)          # (P, init_points)
+
+    def bcast(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (P,) + a.shape), tree)
+
+    state = _State(
+        X=jnp.zeros((P, mp, n), dtype),
+        y=jnp.full((P, mp), jnp.inf, dtype),
+        count=jnp.zeros((P,), jnp.int32),
+        stats=bcast(surrogate.init_stats(n, dtype)),
+        hs=bcast(surrogate.init_horseshoe(n, dtype)),
+        fm=jax.vmap(lambda k: surrogate.init_fm(k, n, cfg.fm_rank, dtype))(
+            jax.random.split(k_fm, P)
+        ),
+        best_x=X0[:, 0],
+        best_y=jnp.full((P,), jnp.inf, dtype),
+    )
+
+    append_plain = jax.vmap(
+        functools.partial(_append, cfg=dataclasses.replace(cfg, augment=False))
+    )
+    append_cfg = jax.vmap(functools.partial(_append, cfg=cfg))
+    sample_many = jax.vmap(functools.partial(_sample_ising, cfg=cfg))
+    dedupe_many = jax.vmap(_dedupe)
+
+    def put_init(state, row):
+        return append_plain(state, row[0], row[1]), None
+
+    state, _ = jax.lax.scan(
+        put_init, state, (jnp.swapaxes(X0, 0, 1), jnp.swapaxes(y0, 0, 1))
+    )
+
+    def iteration(state: _State, key):
+        k_fit, k_solve, k_dupe = jax.random.split(key, 3)
+        if cfg.algo == "rs":
+            x = jax.random.rademacher(k_solve, (P, n), dtype=dtype)
+        else:
+            (h, B), state = sample_many(jax.random.split(k_fit, P), state)
+            x, _ = ising.solve_many(
+                cfg.solver,
+                k_solve,
+                ising.IsingProblem(h, B),
+                num_sweeps=cfg.num_sweeps,
+                num_reads=cfg.num_reads,
+                backend=cfg.backend,
+            )
+            x = x.astype(dtype)
+        x = dedupe_many(jax.random.split(k_dupe, P), state, x)
+        yv = f_batch(x)
+        state = append_cfg(state, x, yv)
+        return state, (state.best_y, x)
+
+    state, (traj, proposed) = jax.lax.scan(
+        iteration, state, jax.random.split(k_loop, cfg.iters)
+    )
+    return BBOResult(
+        best_x=state.best_x,
+        best_y=state.best_y,
+        traj=jnp.swapaxes(traj, 0, 1),             # (P, iters)
+        proposed=jnp.swapaxes(proposed, 0, 1),     # (P, iters, n)
+        X=state.X,
+        y=state.y,
+        count=state.count,
+    )

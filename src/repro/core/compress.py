@@ -67,34 +67,55 @@ def _untile_meta(W_shape, tn, td):
     return W_shape[0] // tn, W_shape[1] // td
 
 
-@functools.partial(jax.jit, static_argnames=("K", "method", "bbo_iters"))
-def _compress_tiles(tiles: jax.Array, K: int, method: str, key, bbo_iters: int = 64):
-    """tiles (T, tn, td) -> (M (T, tn, K), C (T, K, td), rel_err (T,))."""
+@functools.partial(jax.jit, static_argnames=("K", "method", "bbo_iters", "backend"))
+def _compress_tiles(
+    tiles: jax.Array, K: int, method: str, key, bbo_iters: int = 64,
+    backend: str = "auto",
+):
+    """tiles (T, tn, td) -> (M (T, tn, K), C (T, K, td), rel_err (T,)).
 
-    def one(W_t, k):
-        g = dec.greedy_decompose(W_t, K, k)
-        M = g.M
+    The BBO refinement runs all tiles in lock-step through
+    ``bbo_lib.run_bbo_many``: per iteration the T surrogates are fitted
+    under vmap and the T Ising instances are solved by one batched
+    ``ising.solve_many`` call (``backend`` selects jnp vs Pallas)."""
+    tiles = tiles.astype(jnp.float32)
+    T, tn, _ = tiles.shape
+    keys = jax.random.split(key, T)
+
+    def init_one(W_t, k):
+        M = dec.greedy_decompose(W_t, K, k).M
         if method in ("alternating", "bbo"):
             M, _, _ = dec.alternating_decompose(W_t, K, M0=M)
-        if method == "bbo":
-            cfg = bbo_lib.BBOConfig(
-                n=W_t.shape[0] * K, N=W_t.shape[0], K=K,
-                algo="nbocs", solver="sq", iters=bbo_iters,
-                init_points=W_t.shape[0] * K, num_sweeps=24, num_reads=4,
-            )
-            f = dec.make_objective(W_t, K)
-            res = bbo_lib.run_bbo(k, cfg, f)
-            x_bbo = res.best_x.reshape(W_t.shape[0], K)
-            better = res.best_y < dec.objective(M, W_t)
-            M = jnp.where(better, x_bbo, M)
-        C = dec.least_squares_C(M, W_t)
-        err = jnp.sqrt(
-            jnp.maximum(dec.objective(M, W_t), 0.0)
-        ) / jnp.maximum(jnp.linalg.norm(W_t), 1e-30)
-        return M, C, err
+        return M
 
-    keys = jax.random.split(key, tiles.shape[0])
-    return jax.vmap(one)(tiles.astype(jnp.float32), keys)
+    M = jax.vmap(init_one)(tiles, keys)
+
+    if method == "bbo":
+        cfg = bbo_lib.BBOConfig(
+            n=tn * K, N=tn, K=K,
+            algo="nbocs", solver="sq", iters=bbo_iters,
+            init_points=tn * K, num_sweeps=24, num_reads=4,
+            backend=backend,
+        )
+
+        def f_batch(xs):                                   # (T, n) -> (T,)
+            return jax.vmap(lambda W_t, x: dec.objective_from_x(x, W_t, K))(
+                tiles, xs
+            )
+
+        res = bbo_lib.run_bbo_many(jax.random.fold_in(key, 1), cfg, f_batch, T)
+        x_bbo = res.best_x.reshape(T, tn, K)
+        better = res.best_y < jax.vmap(lambda M_t, W_t: dec.objective(M_t, W_t))(
+            M, tiles
+        )
+        M = jnp.where(better[:, None, None], x_bbo, M)
+
+    C = jax.vmap(dec.least_squares_C)(M, tiles)
+    err = jax.vmap(
+        lambda M_t, W_t: jnp.sqrt(jnp.maximum(dec.objective(M_t, W_t), 0.0))
+        / jnp.maximum(jnp.linalg.norm(W_t), 1e-30)
+    )(M, tiles)
+    return M, C, err
 
 
 def compress_matrix(
@@ -121,7 +142,9 @@ def compress_matrix(
         key = jax.random.PRNGKey(0)
 
     tiles = tile_matrix(W, tn, td)
-    M, C, errs = _compress_tiles(tiles, K, method, key, ccfg.bbo_iters)
+    M, C, errs = _compress_tiles(
+        tiles, K, method, key, ccfg.bbo_iters, backend=ccfg.solver_backend
+    )
     r, c = _untile_meta(W.shape, tn, td)
     packed = jax.vmap(dec.pack_bits)(M).reshape(r, c, tn, -1)
     Cw = C.reshape(r, c, K, td).astype(W.dtype)

@@ -6,9 +6,24 @@ All solvers minimise the Ising energy
     E(x) = h . x + x^T B x ,   x in {-1, +1}^n ,
 
 with ``B`` symmetric, zero diagonal (the form produced by
-``repro.core.features.coeffs_to_ising``).  They are pure JAX: a full solve
-(num_reads restarts x num_sweeps sweeps) is one ``lax.scan`` program, so it
-fuses into the surrounding BBO iteration and vmaps over tiles/runs.
+``repro.core.features.coeffs_to_ising``).
+
+The subsystem is batched and backend-dispatched (docs/solvers.md):
+
+``solve_many(name, key, problems, backend=...)``
+    The one entry point on the hot path.  ``problems`` is an
+    ``IsingProblem`` pytree of stacked (h (P, n), B (P, n, n)); all
+    ``P x num_reads`` restart chains run as one flattened chain axis in a
+    single program.  ``backend="jnp"`` runs the pure-jnp oracles from
+    ``repro.kernels.ref`` (vmap over chains); ``backend="pallas"`` runs the
+    Pallas kernels in ``repro.kernels.sa_sweep`` / ``sqa_sweep``
+    (lock-step vectorised sweeps, VMEM-resident state); ``"auto"`` picks
+    pallas on TPU and jnp elsewhere.  Both backends consume the same
+    pre-drawn uniforms, so they realise the same Metropolis chain.
+``solve_sa`` / ``solve_sq`` / ``solve_sqa`` / ``solve``
+    Backward-compatible single-problem wrappers over the same core; the
+    per-problem results of ``solve_many(key, ...)`` equal
+    ``solve(jax.random.split(key, P)[i], ...)`` exactly.
 
 Hardware note (DESIGN.md §4/§6): the paper uses the D-Wave Ocean SDK (neal SA
 + a QPU).  Offline we keep the same defaults in spirit — geometric temperature
@@ -31,8 +46,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref as _ref
+from repro.kernels.sa_sweep import sa_sweep_many, sq_sweep_many
+from repro.kernels.sqa_sweep import sqa_sweep_many
+
 __all__ = [
+    "IsingProblem",
+    "random_problems",
     "ising_energy",
+    "resolve_backend",
+    "solve_many",
     "solve_sa",
     "solve_sq",
     "solve_sqa",
@@ -41,36 +64,51 @@ __all__ = [
 ]
 
 
+class IsingProblem(NamedTuple):
+    """A batch of Ising instances: ``h (P, n)``, ``B (P, n, n)`` (each ``B``
+    symmetric with zero diagonal).  A pytree — stacks, vmaps and shards like
+    any array pair."""
+
+    h: jax.Array
+    B: jax.Array
+
+    @property
+    def num_problems(self) -> int:
+        return self.h.shape[0]
+
+    @property
+    def num_spins(self) -> int:
+        return self.h.shape[-1]
+
+
+def random_problems(
+    key: jax.Array, num_problems: int, n: int, scale: float = 0.3
+) -> IsingProblem:
+    """Random symmetric zero-diagonal instances (tests / benchmarks / demos)."""
+    k1, k2 = jax.random.split(key)
+    h = jax.random.normal(k1, (num_problems, n))
+    B = jax.random.normal(k2, (num_problems, n, n)) * scale
+    B = (B + jnp.swapaxes(B, 1, 2)) / 2
+    return IsingProblem(h, B * (1 - jnp.eye(n)[None]))
+
+
 def ising_energy(x: jax.Array, h: jax.Array, B: jax.Array) -> jax.Array:
     return x @ h + x @ (B @ x)
 
 
-def _field(x, h, B):
-    return h + 2.0 * (B @ x)
+_CANON = {"sa": "sa", "sq": "sq", "qa": "sqa", "sqa": "sqa"}
+_DEFAULT_SWEEPS = {"sa": 64, "sq": 64, "sqa": 48}
+_DEFAULT_TEMPERATURE = {"sq": 0.1, "sqa": 0.05}
 
 
-def _sweep(carry, key, B, temps):
-    """One Metropolis sweep at temperature ``temps`` (scalar per sweep)."""
-    x, f, key_unused = carry
-    n = x.shape[0]
-    del key_unused
-
-    def body(i, state):
-        x, f, key = state
-        key, sub = jax.random.split(key)
-        dE = -2.0 * x[i] * f[i]
-        accept = jax.random.uniform(sub) < jnp.exp(
-            jnp.minimum(-dE / jnp.maximum(temps, 1e-12), 0.0)
-        )
-        accept = jnp.logical_or(dE < 0.0, accept)
-        xi_new = jnp.where(accept, -x[i], x[i])
-        delta = xi_new - x[i]                       # 0 or -2 x_i
-        f = f + 2.0 * B[:, i] * delta               # dF_j = 2 B_ji (x_i' - x_i)
-        x = x.at[i].set(xi_new)
-        return x, f, key
-
-    x, f, key = jax.lax.fori_loop(0, n, body, (x, f, key))
-    return (x, f, key), None
+def resolve_backend(backend: str) -> str:
+    """"auto" -> "pallas" on TPU, "jnp" elsewhere (Pallas then only exists
+    in interpret mode, which is for testing, not speed)."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown backend {backend!r} (auto|pallas|jnp)")
+    return backend
 
 
 def _temperature_schedule(h, B, num_sweeps, hot=2.9, cold=0.4):
@@ -87,37 +125,166 @@ def _temperature_schedule(h, B, num_sweeps, hot=2.9, cold=0.4):
     return t_hot * (t_cold / t_hot) ** r
 
 
-def _run_chain(key, h, B, temps):
-    n = h.shape[0]
-    key, k0 = jax.random.split(key)
-    x0 = jnp.sign(jax.random.rademacher(k0, (n,), dtype=h.dtype))
-    f0 = _field(x0, h, B)
-    (x, _, _), _ = jax.lax.scan(
-        lambda c, t_and_k: _sweep(c, t_and_k[1], B, t_and_k[0]),
-        (x0, f0, key),
-        (temps, jax.random.split(key, temps.shape[0])),
+def _solve_keys(
+    name: str,
+    keys,                      # (P,) PRNG keys, one per problem
+    h: jax.Array,              # (P, n)
+    B: jax.Array,              # (P, n, n)
+    *,
+    num_sweeps: int,
+    num_reads: int,
+    backend: str,
+    temperature: float | None,
+    n_trotter: int,
+    gamma0: float,
+    interpret: bool | None,
+):
+    """Shared batched core: draw x0 + uniforms per problem, anneal every
+    (problem, read) chain in one program, reduce best-of-reads."""
+    backend = resolve_backend(backend)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    P, n = h.shape
+    S, R = num_sweeps, num_reads
+    hf = h.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+
+    if name in ("sa", "sq"):
+        def draw(k):
+            ka, kb = jax.random.split(k)
+            x0 = jax.random.rademacher(ka, (R, n), dtype=jnp.float32)
+            u = jax.random.uniform(kb, (R, S, n), dtype=jnp.float32)
+            return x0, u
+
+        x0, u = jax.vmap(draw)(keys)
+        if name == "sa":
+            temps = jax.vmap(
+                lambda hp, Bp: _temperature_schedule(hp, Bp, S)
+            )(hf, Bf).astype(jnp.float32)
+            if backend == "pallas":
+                xs, es = sa_sweep_many(hf, Bf, x0, u, temps, interpret=interpret)
+            else:
+                xs, es = _ref.sa_sweep_many_ref(hf, Bf, x0, u, temps)
+        else:
+            t = _DEFAULT_TEMPERATURE["sq"] if temperature is None else temperature
+            if backend == "pallas":
+                xs, es = sq_sweep_many(
+                    hf, Bf, x0, u, temperature=t, interpret=interpret
+                )
+            else:
+                xs, es = _ref.sq_sweep_many_ref(hf, Bf, x0, u, temperature=t)
+    elif name == "sqa":
+        t = _DEFAULT_TEMPERATURE["sqa"] if temperature is None else temperature
+        T = n_trotter
+        r = jnp.linspace(0.0, 1.0, S)
+        gammas = gamma0 * (1e-2 / gamma0) ** r
+        # Ferromagnetic inter-slice coupling J_perp(Gamma), shared with the
+        # oracle so both backends see bit-identical couplings.
+        PT = T * t
+        jperps = -0.5 * PT * jnp.log(jnp.tanh(jnp.maximum(gammas / PT, 1e-7)))
+
+        def draw(k):
+            ka, kb = jax.random.split(k)
+            X0 = jax.random.rademacher(ka, (R, T, n), dtype=jnp.float32)
+            u = jax.random.uniform(kb, (R, S, T, n), dtype=jnp.float32)
+            return X0, u
+
+        X0, u = jax.vmap(draw)(keys)
+        if backend == "pallas":
+            X, E = sqa_sweep_many(
+                hf, Bf, X0, u, jperps, temperature=t, interpret=interpret
+            )
+        else:
+            X, E = _ref.sqa_sweep_many_ref(hf, Bf, X0, u, jperps, temperature=t)
+        # every Trotter replica is a candidate: fold into the read axis
+        xs = X.reshape(P, R * T, n)
+        es = E.reshape(P, R * T)
+    else:  # pragma: no cover - canonicalised by callers
+        raise ValueError(f"unknown solver {name!r}")
+
+    best = jnp.argmin(es, axis=1)
+    x = jnp.take_along_axis(xs, best[:, None, None], axis=1)[:, 0]
+    e = jnp.take_along_axis(es, best[:, None], axis=1)[:, 0]
+    return x, e
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "name",
+        "num_sweeps",
+        "num_reads",
+        "backend",
+        "n_trotter",
+        "interpret",
+    ),
+)
+def solve_many(
+    name: str,
+    key: jax.Array,
+    problems: IsingProblem,
+    *,
+    num_sweeps: int | None = None,
+    num_reads: int = 10,
+    backend: str = "auto",
+    temperature: float | None = None,
+    n_trotter: int = 8,
+    gamma0: float = 3.0,
+    interpret: bool | None = None,
+):
+    """Solve a batch of Ising problems in one program.
+
+    Returns ``(x (P, n), e (P,))`` — the best-of-``num_reads`` spin vector
+    and its energy per problem.  ``name`` is "sa" | "sq" | "qa"/"sqa";
+    ``backend`` is "auto" | "pallas" | "jnp".  Problem ``i`` reproduces
+    ``solve(name, jax.random.split(key, P)[i], h[i], B[i])`` exactly."""
+    canon = _CANON.get(name)
+    if canon is None:
+        raise ValueError(f"unknown solver {name!r} (sa|sq|qa|sqa)")
+    h, B = problems
+    keys = jax.random.split(key, h.shape[0])
+    return _solve_keys(
+        canon,
+        keys,
+        h,
+        B,
+        num_sweeps=_DEFAULT_SWEEPS[canon] if num_sweeps is None else num_sweeps,
+        num_reads=num_reads,
+        backend=backend,
+        temperature=temperature,
+        n_trotter=n_trotter,
+        gamma0=gamma0,
+        interpret=interpret,
     )
-    return x, ising_energy(x, h, B)
 
 
-@functools.partial(jax.jit, static_argnames=("num_sweeps", "num_reads"))
+# ---------------------------------------------------------------------------
+# Backward-compatible single-problem wrappers
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("num_sweeps", "num_reads", "backend")
+)
 def solve_sa(
     key: jax.Array,
     h: jax.Array,
     B: jax.Array,
     num_sweeps: int = 64,
     num_reads: int = 10,
+    backend: str = "auto",
 ):
     """Simulated annealing; returns the best of ``num_reads`` restarts."""
-    temps = _temperature_schedule(h, B, num_sweeps)
-    xs, es = jax.vmap(lambda k: _run_chain(k, h, B, temps))(
-        jax.random.split(key, num_reads)
+    x, e = _solve_keys(
+        "sa", key[None], h[None], B[None],
+        num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
+        temperature=None, n_trotter=8, gamma0=3.0, interpret=None,
     )
-    best = jnp.argmin(es)
-    return xs[best], es[best]
+    return x[0], e[0]
 
 
-@functools.partial(jax.jit, static_argnames=("num_sweeps", "num_reads"))
+@functools.partial(
+    jax.jit, static_argnames=("num_sweeps", "num_reads", "backend")
+)
 def solve_sq(
     key: jax.Array,
     h: jax.Array,
@@ -125,65 +292,20 @@ def solve_sq(
     num_sweeps: int = 64,
     num_reads: int = 10,
     temperature: float = 0.1,
+    backend: str = "auto",
 ):
     """Simulated quenching: constant low temperature (paper: T = 0.1)."""
-    temps = jnp.full((num_sweeps,), temperature, h.dtype)
-    xs, es = jax.vmap(lambda k: _run_chain(k, h, B, temps))(
-        jax.random.split(key, num_reads)
+    x, e = _solve_keys(
+        "sq", key[None], h[None], B[None],
+        num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
+        temperature=temperature, n_trotter=8, gamma0=3.0, interpret=None,
     )
-    best = jnp.argmin(es)
-    return xs[best], es[best]
-
-
-# ---------------------------------------------------------------------------
-# Simulated quantum annealing (path-integral Monte Carlo)
-# ---------------------------------------------------------------------------
-
-def _sqa_chain(key, h, B, gammas, n_trotter, temperature):
-    """One SQA run: ``n_trotter`` coupled replicas, transverse field annealed
-    along ``gammas``; returns the best replica at the end."""
-    n = h.shape[0]
-    key, k0 = jax.random.split(key)
-    X0 = jnp.sign(jax.random.rademacher(k0, (n_trotter, n), dtype=h.dtype))
-    PT = n_trotter * temperature
-
-    def sweep(X, inputs):
-        gamma, key = inputs
-        # Ferromagnetic inter-slice coupling J_perp(Gamma).
-        jperp = -0.5 * PT * jnp.log(jnp.tanh(jnp.maximum(gamma / PT, 1e-7)))
-
-        def slice_body(p, state):
-            X, key = state
-
-            def spin_body(i, state):
-                X, key = state
-                key, sub = jax.random.split(key)
-                x = X[p]
-                f = h[i] + 2.0 * (B[i] @ x)
-                up = X[(p + 1) % n_trotter, i]
-                dn = X[(p - 1) % n_trotter, i]
-                dE = -2.0 * x[i] * (f / n_trotter + jperp * (up + dn))
-                accept = jnp.logical_or(
-                    dE < 0.0,
-                    jax.random.uniform(sub) < jnp.exp(jnp.minimum(-dE / temperature, 0.0)),
-                )
-                X = X.at[p, i].set(jnp.where(accept, -x[i], x[i]))
-                return X, key
-
-            return jax.lax.fori_loop(0, n, spin_body, (X, key))
-
-        X, key = jax.lax.fori_loop(0, n_trotter, slice_body, (X, key))
-        return X, None
-
-    keys = jax.random.split(key, gammas.shape[0])
-    X, _ = jax.lax.scan(sweep, X0, (gammas, keys))
-    es = jax.vmap(lambda x: ising_energy(x, h, B))(X)
-    best = jnp.argmin(es)
-    return X[best], es[best]
+    return x[0], e[0]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_sweeps", "num_reads", "n_trotter")
+    jax.jit,
+    static_argnames=("num_sweeps", "num_reads", "n_trotter", "backend"),
 )
 def solve_sqa(
     key: jax.Array,
@@ -194,19 +316,22 @@ def solve_sqa(
     n_trotter: int = 8,
     temperature: float = 0.05,
     gamma0: float = 3.0,
+    backend: str = "auto",
 ):
     """Simulated QA: transverse field annealed geometrically Gamma0 -> ~0."""
-    r = jnp.linspace(0.0, 1.0, num_sweeps)
-    gammas = gamma0 * (1e-2 / gamma0) ** r
-    xs, es = jax.vmap(
-        lambda k: _sqa_chain(k, h, B, gammas, n_trotter, temperature)
-    )(jax.random.split(key, num_reads))
-    best = jnp.argmin(es)
-    return xs[best], es[best]
+    x, e = _solve_keys(
+        "sqa", key[None], h[None], B[None],
+        num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
+        temperature=temperature, n_trotter=n_trotter, gamma0=gamma0,
+        interpret=None,
+    )
+    return x[0], e[0]
 
 
-SOLVERS = {"sa": solve_sa, "sq": solve_sq, "qa": solve_sqa}
+SOLVERS = {"sa": solve_sa, "sq": solve_sq, "qa": solve_sqa, "sqa": solve_sqa}
 
 
 def solve(name: str, key, h, B, **kw):
+    if name not in SOLVERS:
+        raise ValueError(f"unknown solver {name!r} (sa|sq|qa|sqa)")
     return SOLVERS[name](key, h, B, **kw)

@@ -1,0 +1,15 @@
+"""Version shims for the Pallas TPU API surface.
+
+``TPUCompilerParams`` was renamed ``CompilerParams`` across jax releases;
+resolve whichever this jax ships so the kernels import cleanly on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

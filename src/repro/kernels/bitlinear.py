@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 __all__ = ["bitlinear"]
 
 
@@ -83,7 +85,7 @@ def bitlinear(
         out_specs=pl.BlockSpec((bt, td), lambda t, c, r: (t, c)),
         out_shape=jax.ShapeDtypeStruct((T, n_c * td), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, td), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

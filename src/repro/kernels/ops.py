@@ -15,6 +15,9 @@ from repro.core import quantized
 from repro.kernels.bitlinear import bitlinear as _bitlinear
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.sa_sweep import sa_sweep as _sa_sweep
+from repro.kernels.sa_sweep import sa_sweep_many as _sa_sweep_many
+from repro.kernels.sa_sweep import sq_sweep_many as _sq_sweep_many
+from repro.kernels.sqa_sweep import sqa_sweep_many as _sqa_sweep_many
 from repro.models import attention as attn_lib
 
 __all__ = [
@@ -22,6 +25,9 @@ __all__ = [
     "bitlinear",
     "flash_attention",
     "sa_sweep",
+    "sa_sweep_many",
+    "sq_sweep_many",
+    "sqa_sweep_many",
     "enable_kernels",
 ]
 
@@ -46,6 +52,30 @@ def sa_sweep(h, B, x0, rand, temps, interpret: bool | None = None):
     if interpret is None:
         interpret = default_interpret()
     return _sa_sweep(h, B, x0, rand, temps, interpret=interpret)
+
+
+def sa_sweep_many(h, B, x0, rand, temps, block_p: int | None = None,
+                  interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _sa_sweep_many(h, B, x0, rand, temps, block_p=block_p,
+                          interpret=interpret)
+
+
+def sq_sweep_many(h, B, x0, rand, temperature: float = 0.1,
+                  block_p: int | None = None, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _sq_sweep_many(h, B, x0, rand, temperature=temperature,
+                          block_p=block_p, interpret=interpret)
+
+
+def sqa_sweep_many(h, B, X0, rand, jperps, temperature: float = 0.05,
+                   interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _sqa_sweep_many(h, B, X0, rand, jperps, temperature=temperature,
+                           interpret=interpret)
 
 
 def enable_kernels(interpret: bool | None = None) -> None:

@@ -8,7 +8,15 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bitlinear_ref", "flash_attention_ref", "sa_sweep_ref"]
+__all__ = [
+    "bitlinear_ref",
+    "flash_attention_ref",
+    "sa_sweep_ref",
+    "sa_sweep_many_ref",
+    "sq_sweep_many_ref",
+    "sqa_sweep_ref",
+    "sqa_sweep_many_ref",
+]
 
 
 def _unpack(m_packed: jax.Array, K: int, dtype) -> jax.Array:
@@ -81,3 +89,80 @@ def sa_sweep_ref(h, B, x0, rand, temps):
         return x, e
 
     return jax.vmap(one_chain)(x0, rand)
+
+
+def sa_sweep_many_ref(h, B, x0, rand, temps):
+    """Multi-problem SA oracle (the jnp backend of ``ising.solve_many``):
+    h (P, n), B (P, n, n), x0 (P, C, n), rand (P, C, S, n), temps (P, S)
+    -> (x (P, C, n), e (P, C)).  Idiomatic vmap-of-scan over the bit-exact
+    single-problem reference; the Pallas kernel replaces the per-spin
+    scatter with lock-step rank-3 updates but consumes the same uniforms."""
+    return jax.vmap(sa_sweep_ref)(h, B, x0, rand, temps)
+
+
+def sq_sweep_many_ref(h, B, x0, rand, temperature=0.1):
+    """Constant-temperature (simulated quench) path of the SA oracle."""
+    P, _, S, _ = rand.shape
+    temps = jnp.full((P, S), temperature, jnp.float32)
+    return sa_sweep_many_ref(h, B, x0, rand, temps)
+
+
+def sqa_sweep_ref(h, B, X0, rand, jperps, temperature=0.05):
+    """Sequential path-integral SQA consuming the same uniforms as the
+    kernel — bit-exact reference for one problem.
+
+    X0 (C, T, n) replica spins per chain, rand (C, S, T, n), jperps (S,)
+    pre-computed inter-replica couplings -> (X (C, T, n), E (C, T))."""
+    hf = h.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    T = X0.shape[1]
+    n = X0.shape[2]
+
+    def one_chain(X0c, randc):
+        X = X0c.astype(jnp.float32)
+        F = hf[None] + 2.0 * jax.lax.dot_general(
+            X, Bf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+        def sweep(carry, su):
+            X, F = carry
+            jperp, u = su
+
+            def slice_body(p, carry):
+                X, F = carry
+                up = (p + 1) % T
+                dn = (p - 1) % T
+
+                def spin(i, carry):
+                    X, F = carry
+                    xi = X[p, i]
+                    dE = -2.0 * xi * (
+                        F[p, i] / T + jperp * (X[up, i] + X[dn, i])
+                    )
+                    accept = jnp.logical_or(
+                        dE < 0.0,
+                        u[p, i]
+                        < jnp.exp(-dE / jnp.maximum(temperature, 1e-12)),
+                    )
+                    delta = jnp.where(accept, -2.0 * xi, 0.0)
+                    F = F.at[p].add(2.0 * Bf[:, i] * delta)
+                    X = X.at[p, i].add(delta)
+                    return X, F
+
+                return jax.lax.fori_loop(0, n, spin, (X, F))
+
+            X, F = jax.lax.fori_loop(0, T, slice_body, (X, F))
+            return (X, F), None
+
+        (X, _), _ = jax.lax.scan(sweep, (X, F), (jperps, randc))
+        E = jax.vmap(lambda x: x @ hf + x @ (Bf @ x))(X)
+        return X, E
+
+    return jax.vmap(one_chain)(X0, rand)
+
+
+def sqa_sweep_many_ref(h, B, X0, rand, jperps, temperature=0.05):
+    """Multi-problem SQA oracle: leading problem axis on h/B/X0/rand."""
+    return jax.vmap(
+        lambda hp, Bp, Xp, rp: sqa_sweep_ref(hp, Bp, Xp, rp, jperps, temperature)
+    )(h, B, X0, rand)

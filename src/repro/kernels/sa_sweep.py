@@ -1,16 +1,29 @@
 """Pallas TPU kernel: batched simulated-annealing sweeps for Ising solves.
 
 The BBO inner loop (repro/core) solves thousands of small Ising problems —
-one per matrix tile x restart chain.  n <= 64 spins means the coupling
+one per matrix tile x restart chain.  n <= 64 spins means one coupling
 matrix B (n x n f32 <= 16 KiB) sits comfortably in VMEM, so whole annealing
-runs execute on-chip with zero HBM traffic beyond the initial tile load:
-grid = (chains,), each grid cell runs `sweeps x n` sequential Metropolis
-updates with an incrementally maintained local field.
+runs execute on-chip with zero HBM traffic beyond the initial tile load.
 
-Randomness: pre-drawn uniforms are streamed in (chains, sweeps, n) — this
-keeps the kernel bit-exact against the pure-jnp oracle in ref.py (and avoids
-pltpu PRNG in interpret mode).  Spin update i uses
-    dE = -2 x_i (h_i + 2 (B x)_i);  accept iff  u < exp(-dE / T_s).
+Two entry points:
+
+``sa_sweep_many``
+    The batched backend used by ``repro.core.ising.solve_many``: a block of
+    ``block_p`` problems per grid cell, every (problem, chain) pair updated
+    in lock-step vectorised Metropolis sweeps.  grid = (P // block_p,);
+    within a cell the state is x (bp, C, n), f (bp, C, n) and a spin update
+    is a rank-3 FMA — no scatter, which is what makes this the fast path
+    (the pure-jnp oracle pays a batched scatter per spin).
+``sq_sweep_many``
+    The constant-temperature simulated-quench path: same kernel, the
+    (P, S) schedule is just filled with one temperature.
+``sa_sweep``
+    Backward-compatible single-problem wrapper (grid over chains only).
+
+Randomness: pre-drawn uniforms are streamed in (P, chains, sweeps, n) —
+this keeps the kernel bit-exact against the pure-jnp oracles in ref.py
+(and avoids pltpu PRNG in interpret mode).  Spin update i uses
+    dE = -2 x_i (h_i + 2 (B x)_i);  accept iff  dE < 0 or u < exp(-dE / T_s).
 """
 
 from __future__ import annotations
@@ -20,51 +33,140 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sa_sweep"]
+__all__ = ["sa_sweep", "sa_sweep_many", "sq_sweep_many"]
 
 
-def _kernel(h_ref, b_ref, x0_ref, rand_ref, temps_ref, x_ref, e_ref):
-    h = h_ref[...]                        # (1, n)
-    B = b_ref[...]                        # (n, n)
-    x = x0_ref[...]                       # (1, n)
-    n = h.shape[1]
-    sweeps = temps_ref.shape[1]
+def _anneal_block(h, B, x0, rand_flat, temps):
+    """Lock-step Metropolis anneal of a block of problems.
 
-    # local field f_i = h_i + 2 (B x)_i
-    f = h + 2.0 * jnp.dot(x, B.T, preferred_element_type=jnp.float32)
+    h (bp, n) · B (bp, n, n) · x0 (bp, C, n) · rand_flat (bp, C, S*n) ·
+    temps (bp, S)  ->  x (bp, C, n), e (bp, C).  Pure jnp, traced inside the
+    Pallas kernel.  The independent oracle ``ref.sa_sweep_ref`` consumes the
+    same uniforms in the same (sweep, spin) order — keep the two in
+    lock-step.
+    """
+    bp, C, n = x0.shape
+    S = temps.shape[1]
+    x = x0
+    # f[p, c, :] = h[p] + 2 (B[p] @ x[p, c])
+    f = h[:, None, :] + 2.0 * jax.lax.dot_general(
+        x, B, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
 
     def sweep_body(s, carry):
         x, f = carry
-        t = temps_ref[0, s]
+        t = jax.lax.dynamic_slice(temps, (0, s), (bp, 1))[:, :, None]
 
         def spin_body(i, carry):
             x, f = carry
-            xi = jax.lax.dynamic_slice(x, (0, i), (1, 1))[0, 0]
-            fi = jax.lax.dynamic_slice(f, (0, i), (1, 1))[0, 0]
+            xi = jax.lax.dynamic_slice(x, (0, 0, i), (bp, C, 1))
+            fi = jax.lax.dynamic_slice(f, (0, 0, i), (bp, C, 1))
+            u = jax.lax.dynamic_slice(rand_flat, (0, 0, s * n + i), (bp, C, 1))
             dE = -2.0 * xi * fi
-            u = rand_ref[0, s, i]
-            accept = jnp.logical_or(dE < 0.0, u < jnp.exp(-dE / jnp.maximum(t, 1e-12)))
+            accept = (dE < 0.0) | (u < jnp.exp(-dE / jnp.maximum(t, 1e-12)))
             delta = jnp.where(accept, -2.0 * xi, 0.0)
-            # f_j += 2 B_ji delta_i ; x_i += delta
-            bcol = jax.lax.dynamic_slice(B, (i, 0), (1, n))       # row i == col i (B symmetric)
+            bcol = jax.lax.dynamic_slice(B, (0, i, 0), (bp, 1, n))  # row i == col i
             f = f + 2.0 * bcol * delta
-            x = x + delta * _onehot_row(i, n, x.dtype)
+            x = jax.lax.dynamic_update_slice(x, xi + delta, (0, 0, i))
             return x, f
 
         return jax.lax.fori_loop(0, n, spin_body, (x, f))
 
-    x, f = jax.lax.fori_loop(0, sweeps, sweep_body, (x, f))
-    x_ref[...] = x
-    # E = h.x + x^T B x
-    e_ref[0, 0] = (
-        jnp.sum(h * x) + jnp.sum(x * jnp.dot(x, B.T, preferred_element_type=jnp.float32))
+    x, _ = jax.lax.fori_loop(0, S, sweep_body, (x, f))
+    e = jnp.sum(x * h[:, None, :], axis=2) + jnp.sum(
+        x
+        * jax.lax.dot_general(
+            x, B, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+        ),
+        axis=2,
     )
+    return x, e
 
 
-def _onehot_row(i, n, dtype):
-    return (jax.lax.broadcasted_iota(jnp.int32, (1, n), 1) == i).astype(dtype)
+def _many_kernel(h_ref, b_ref, x0_ref, rand_ref, temps_ref, x_ref, e_ref):
+    x, e = _anneal_block(h_ref[...], b_ref[...], x0_ref[...], rand_ref[...], temps_ref[...])
+    x_ref[...] = x
+    e_ref[...] = e
+
+
+_VMEM_BLOCK_BUDGET = 4 * 1024 * 1024  # bytes of per-cell operands, ~1/4 of VMEM
+
+
+def _auto_block_p(P: int, C: int, S: int, n: int, interpret: bool) -> int:
+    """Largest divisor of P whose block operands fit the VMEM budget.
+    Interpret mode has no VMEM: one cell (fewest sequential grid steps)."""
+    if interpret:
+        return P
+    per_problem = 4 * (n + n * n + 2 * C * n + C * S * n + S + C)
+    bp = min(P, max(1, _VMEM_BLOCK_BUDGET // per_problem))
+    while P % bp:
+        bp -= 1
+    return bp
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def sa_sweep_many(
+    h: jax.Array,       # (P, n)
+    B: jax.Array,       # (P, n, n) symmetric, zero diag
+    x0: jax.Array,      # (P, chains, n) initial +-1 spins
+    rand: jax.Array,    # (P, chains, sweeps, n) uniforms in [0, 1)
+    temps: jax.Array,   # (P, sweeps) per-problem temperature schedules
+    block_p: int | None = None,
+    interpret: bool = False,
+):
+    """Batched SA: P problems x chains in one program.  Returns
+    (x (P, chains, n), energy (P, chains))."""
+    P, C, n = x0.shape
+    S = temps.shape[1]
+    bp = _auto_block_p(P, C, S, n, interpret) if block_p is None else block_p
+    if P % bp != 0:
+        raise ValueError(f"block_p={bp} must divide problems={P}")
+    rand_flat = rand.astype(jnp.float32).reshape(P, C, S * n)
+
+    x, e = pl.pallas_call(
+        _many_kernel,
+        grid=(P // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, n), lambda p: (p, 0)),
+            pl.BlockSpec((bp, n, n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((bp, C, n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((bp, C, S * n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((bp, S), lambda p: (p, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp, C, n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((bp, C), lambda p: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, C, n), jnp.float32),
+            jax.ShapeDtypeStruct((P, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        h.astype(jnp.float32),
+        B.astype(jnp.float32),
+        x0.astype(jnp.float32),
+        rand_flat,
+        temps.astype(jnp.float32),
+    )
+    return x, e
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def sq_sweep_many(
+    h: jax.Array,       # (P, n)
+    B: jax.Array,       # (P, n, n)
+    x0: jax.Array,      # (P, chains, n)
+    rand: jax.Array,    # (P, chains, sweeps, n)
+    temperature: float = 0.1,
+    block_p: int | None = None,
+    interpret: bool = False,
+):
+    """Simulated quench: constant-temperature path through the SA kernel."""
+    P, _, S, _ = rand.shape
+    temps = jnp.full((P, S), temperature, jnp.float32)
+    return sa_sweep_many(h, B, x0, rand, temps, block_p=block_p, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -76,35 +178,8 @@ def sa_sweep(
     temps: jax.Array,   # (sweeps,) temperature schedule
     interpret: bool = False,
 ):
-    """Returns (x (chains, n), energy (chains,))."""
-    chains, n = x0.shape
-    sweeps = temps.shape[0]
-    xf = x0.astype(jnp.float32)
-
-    x, e = pl.pallas_call(
-        _kernel,
-        grid=(chains,),
-        in_specs=[
-            pl.BlockSpec((1, n), lambda c: (0, 0)),
-            pl.BlockSpec((n, n), lambda c: (0, 0)),
-            pl.BlockSpec((1, n), lambda c: (c, 0)),
-            pl.BlockSpec((1, sweeps, n), lambda c: (c, 0, 0)),
-            pl.BlockSpec((1, sweeps), lambda c: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, n), lambda c: (c, 0)),
-            pl.BlockSpec((1, 1), lambda c: (c, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((chains, n), jnp.float32),
-            jax.ShapeDtypeStruct((chains, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(
-        h[None, :].astype(jnp.float32),
-        B.astype(jnp.float32),
-        xf,
-        rand,
-        temps[None, :].astype(jnp.float32),
+    """Single-problem wrapper.  Returns (x (chains, n), energy (chains,))."""
+    x, e = sa_sweep_many(
+        h[None], B[None], x0[None], rand[None], temps[None], interpret=interpret
     )
-    return x, e[:, 0]
+    return x[0], e[0]

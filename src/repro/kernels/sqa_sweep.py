@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: batched simulated-quantum-annealing (path-integral
+Monte Carlo) sweeps — the Trotter-replica quench behind ``solver="qa"``.
+
+Each chain carries ``n_trotter`` coupled replicas of the n-spin system.  A
+sweep visits (slice p, spin i) in sequence at transverse-field coupling
+``jperp_s`` (pre-computed per sweep from the annealed Gamma schedule, so the
+kernel and the ref.py oracle share exact values):
+
+    dE = -2 X[p,i] ( F[p,i]/T + jperp_s (X[p+1,i] + X[p-1,i]) )
+    accept iff dE < 0 or u < exp(-dE / temperature)
+
+with F the per-replica local field h + 2 B X_p, maintained incrementally.
+grid = (P,); within a cell the state is X (C, T, n), F (C, T, n) and all
+chains update in lock-step.  Pre-drawn uniforms (P, C, S, T, n) keep the
+kernel bit-exact against ``ref.sqa_sweep_many_ref``.
+
+The kernel returns every replica and its Ising energy; the caller
+(``repro.core.ising.solve_many``) reduces best-of over (reads x replicas).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sqa_sweep_many"]
+
+
+def _quench_chains(h, B, X0, rand_flat, jperps, n_trotter, temperature):
+    """Lock-step PIMC quench of one problem's chains.
+
+    h (1, n) · B (n, n) · X0 (C, T, n) · rand_flat (C, S*T*n) · jperps (1, S)
+    ->  X (C, T, n), E (C, T).  Pure jnp, traced inside the Pallas kernel.
+    The independent oracle ``ref.sqa_sweep_ref`` consumes the same uniforms
+    in the same (sweep, slice, spin) order — keep the two in lock-step.
+    """
+    C, T, n = X0.shape
+    S = jperps.shape[1]
+    X = X0
+    # F[c, p, :] = h + 2 (B @ X[c, p])
+    F = h[None] + 2.0 * jax.lax.dot_general(
+        X, B, (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    def sweep_body(s, carry):
+        X, F = carry
+        jperp = jax.lax.dynamic_slice(jperps, (0, s), (1, 1))[0, 0]
+
+        def slice_body(p, carry):
+            X, F = carry
+            up = (p + 1) % T
+            dn = (p - 1) % T
+
+            def spin_body(i, carry):
+                X, F = carry
+                xi = jax.lax.dynamic_slice(X, (0, p, i), (C, 1, 1))
+                fi = jax.lax.dynamic_slice(F, (0, p, i), (C, 1, 1))
+                xup = jax.lax.dynamic_slice(X, (0, up, i), (C, 1, 1))
+                xdn = jax.lax.dynamic_slice(X, (0, dn, i), (C, 1, 1))
+                u = jax.lax.dynamic_slice(
+                    rand_flat, (0, (s * T + p) * n + i), (C, 1)
+                )[:, :, None]
+                dE = -2.0 * xi * (fi / n_trotter + jperp * (xup + xdn))
+                accept = (dE < 0.0) | (
+                    u < jnp.exp(-dE / jnp.maximum(temperature, 1e-12))
+                )
+                delta = jnp.where(accept, -2.0 * xi, 0.0)
+                bcol = jax.lax.dynamic_slice(B, (i, 0), (1, n))[None]  # (1, 1, n)
+                Fp = jax.lax.dynamic_slice(F, (0, p, 0), (C, 1, n))
+                F = jax.lax.dynamic_update_slice(F, Fp + 2.0 * bcol * delta, (0, p, 0))
+                X = jax.lax.dynamic_update_slice(X, xi + delta, (0, p, i))
+                return X, F
+
+            return jax.lax.fori_loop(0, n, spin_body, (X, F))
+
+        return jax.lax.fori_loop(0, T, slice_body, (X, F))
+
+    X, _ = jax.lax.fori_loop(0, S, sweep_body, (X, F))
+    E = jnp.sum(X * h[None], axis=2) + jnp.sum(
+        X
+        * jax.lax.dot_general(
+            X, B, (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ),
+        axis=2,
+    )
+    return X, E
+
+
+def _sqa_kernel(h_ref, b_ref, x0_ref, rand_ref, jperps_ref, temp_ref, x_ref, e_ref):
+    X0 = x0_ref[...][0]          # (C, T, n)
+    rand = rand_ref[...][0]      # (C, S*T*n)
+    T = X0.shape[1]
+    X, E = _quench_chains(
+        h_ref[...], b_ref[...][0], X0, rand, jperps_ref[...], T, temp_ref[0, 0]
+    )
+    x_ref[...] = X[None]
+    e_ref[...] = E[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sqa_sweep_many(
+    h: jax.Array,       # (P, n)
+    B: jax.Array,       # (P, n, n) symmetric, zero diag
+    X0: jax.Array,      # (P, chains, n_trotter, n) initial +-1 spins
+    rand: jax.Array,    # (P, chains, sweeps, n_trotter, n) uniforms in [0, 1)
+    jperps: jax.Array,  # (sweeps,) inter-replica couplings J_perp(Gamma_s)
+    temperature: float = 0.05,
+    interpret: bool = False,
+):
+    """Batched SQA: P problems x chains x Trotter replicas in one program.
+    Returns (X (P, chains, n_trotter, n), energy (P, chains, n_trotter))."""
+    P, C, T, n = X0.shape
+    S = jperps.shape[0]
+    rand_flat = rand.astype(jnp.float32).reshape(P, C, S * T * n)
+
+    X, E = pl.pallas_call(
+        _sqa_kernel,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda p: (p, 0)),
+            pl.BlockSpec((1, n, n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((1, C, T, n), lambda p: (p, 0, 0, 0)),
+            pl.BlockSpec((1, C, S * T * n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((1, S), lambda p: (0, 0)),
+            pl.BlockSpec((1, 1), lambda p: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, T, n), lambda p: (p, 0, 0, 0)),
+            pl.BlockSpec((1, C, T), lambda p: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, C, T, n), jnp.float32),
+            jax.ShapeDtypeStruct((P, C, T), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        h.astype(jnp.float32),
+        B.astype(jnp.float32),
+        X0.astype(jnp.float32),
+        rand_flat,
+        jperps[None].astype(jnp.float32),
+        jnp.full((1, 1), temperature, jnp.float32),
+    )
+    return X, E

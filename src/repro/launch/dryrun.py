@@ -38,7 +38,7 @@ import jax
 from repro.configs import ARCHITECTURES, shape_cells
 from repro.distributed.sharding import activation_rules
 from repro.launch.cells import build_cell
-from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.mesh import describe, make_production_mesh, set_mesh
 from repro.roofline import collective_bytes, cost_summary, memory_summary
 
 HBM_BYTES = 16 * 1024**3  # TPU v5e
@@ -48,7 +48,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     cell = build_cell(arch, shape_name, mesh)
-    with jax.set_mesh(mesh), activation_rules(cell.pcfg, mesh):
+    with set_mesh(mesh), activation_rules(cell.pcfg, mesh):
         lowered = jax.jit(
             cell.fn,
             in_shardings=cell.in_shardings,

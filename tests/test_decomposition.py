@@ -1,11 +1,12 @@
 """Unit + property tests for the integer-decomposition core (paper Eq. 1-9)."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import decomposition as dec
 from repro.core import symmetry

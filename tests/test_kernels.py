@@ -61,6 +61,63 @@ def test_flash_attention_matches_ref(B, H, KV, S, hd, win, bq, dtype):
     )
 
 
+def _rand_problems(key, P, n, scale=0.2):
+    from repro.core.ising import random_problems
+
+    return random_problems(key, P, n, scale)
+
+
+@pytest.mark.parametrize("P,n,chains,sweeps,block_p", [
+    (4, 8, 2, 8, None),        # single grid cell (block_p = P)
+    (6, 24, 4, 16, 2),         # multi-cell grid
+    (3, 48, 3, 8, 1),          # one problem per cell
+])
+def test_sa_sweep_many_bit_exact_vs_ref(P, n, chains, sweeps, block_p):
+    ks = jax.random.split(jax.random.PRNGKey(P * n), 3)
+    h, B = _rand_problems(ks[0], P, n)
+    x0 = jax.random.rademacher(ks[1], (P, chains, n), dtype=jnp.float32)
+    rand = jax.random.uniform(ks[2], (P, chains, sweeps, n))
+    temps = jnp.broadcast_to(jnp.linspace(2.0, 0.05, sweeps)[None], (P, sweeps))
+    xk, ek = ops.sa_sweep_many(h, B, x0, rand, temps, block_p=block_p,
+                               interpret=True)
+    xr, er = ref.sa_sweep_many_ref(h, B, x0, rand, temps)
+    np.testing.assert_array_equal(np.asarray(xk), np.asarray(xr))
+    np.testing.assert_allclose(np.asarray(ek), np.asarray(er), rtol=1e-4, atol=1e-4)
+
+
+def test_sq_sweep_many_bit_exact_vs_ref():
+    P, n, chains, sweeps = 5, 16, 3, 12
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    h, B = _rand_problems(ks[0], P, n)
+    x0 = jax.random.rademacher(ks[1], (P, chains, n), dtype=jnp.float32)
+    rand = jax.random.uniform(ks[2], (P, chains, sweeps, n))
+    xk, ek = ops.sq_sweep_many(h, B, x0, rand, temperature=0.1, interpret=True)
+    xr, er = ref.sq_sweep_many_ref(h, B, x0, rand, temperature=0.1)
+    np.testing.assert_array_equal(np.asarray(xk), np.asarray(xr))
+    np.testing.assert_allclose(np.asarray(ek), np.asarray(er), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("P,chains,trotter,sweeps,n", [
+    (3, 2, 4, 8, 8),
+    (2, 3, 8, 12, 24),
+])
+def test_sqa_sweep_many_bit_exact_vs_ref(P, chains, trotter, sweeps, n):
+    ks = jax.random.split(jax.random.PRNGKey(P + n), 3)
+    h, B = _rand_problems(ks[0], P, n)
+    X0 = jax.random.rademacher(ks[1], (P, chains, trotter, n), dtype=jnp.float32)
+    rand = jax.random.uniform(ks[2], (P, chains, sweeps, trotter, n))
+    temperature = 0.05
+    gammas = 3.0 * (1e-2 / 3.0) ** jnp.linspace(0.0, 1.0, sweeps)
+    PT = trotter * temperature
+    jperps = -0.5 * PT * jnp.log(jnp.tanh(jnp.maximum(gammas / PT, 1e-7)))
+    Xk, Ek = ops.sqa_sweep_many(h, B, X0, rand, jperps,
+                                temperature=temperature, interpret=True)
+    Xr, Er = ref.sqa_sweep_many_ref(h, B, X0, rand, jperps,
+                                    temperature=temperature)
+    np.testing.assert_array_equal(np.asarray(Xk), np.asarray(Xr))
+    np.testing.assert_allclose(np.asarray(Ek), np.asarray(Er), rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("n,chains,sweeps", [(8, 2, 8), (24, 4, 16), (48, 3, 8)])
 def test_sa_sweep_bit_exact_vs_ref(n, chains, sweeps):
     ks = jax.random.split(jax.random.PRNGKey(n), 4)

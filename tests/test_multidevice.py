@@ -29,7 +29,7 @@ def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
 def test_sharded_training_loss_decreases_and_elastic_restore(tmp_path):
     out = run_py(f"""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh, set_mesh
         from repro.configs import get_config, reduced_for_smoke
         from repro.configs.base import ParallelConfig, ShapeConfig
         from repro.training import init_train_state, make_train_step, state_shardings
@@ -38,7 +38,7 @@ def test_sharded_training_loss_decreases_and_elastic_restore(tmp_path):
         from repro.optim import warmup_cosine
         from repro.checkpoint.manager import CheckpointManager
 
-        mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((2,4), ("data","model"))
         cfg = reduced_for_smoke(get_config("qwen3-32b"))
         pcfg = ParallelConfig(mesh_shape=(2,4), mesh_axes=("data","model"), microbatches=2)
         shape = ShapeConfig("tiny", "train", 64, 8)
@@ -46,7 +46,7 @@ def test_sharded_training_loss_decreases_and_elastic_restore(tmp_path):
         sh = state_shardings(cfg, pcfg, mesh)
         step_fn = make_train_step(cfg, pcfg, warmup_cosine(1e-3, 10, 100))
         pipe = make_pipeline(cfg, shape, mesh)
-        with jax.set_mesh(mesh), activation_rules(pcfg, mesh):
+        with set_mesh(mesh), activation_rules(pcfg, mesh):
             jstep = jax.jit(step_fn, in_shardings=(sh, None), out_shardings=(sh, None), donate_argnums=0)
             losses = []
             for i in range(8):
@@ -56,7 +56,7 @@ def test_sharded_training_loss_decreases_and_elastic_restore(tmp_path):
 
         mgr = CheckpointManager(r"{tmp_path}", keep_last=2)
         mgr.save(int(state.step), state); mgr.wait()
-        mesh2 = jax.make_mesh((4,2), ("data","model"), axis_types=(AxisType.Auto,)*2)
+        mesh2 = make_mesh((4,2), ("data","model"))
         sh2 = state_shardings(cfg, pcfg, mesh2)
         step2, restored = mgr.restore_latest(state, sh2)
         ok = jax.tree.all(jax.tree.map(
@@ -73,7 +73,7 @@ def test_microbatch_accumulation_equivalence():
     """micro=2 and micro=1 produce (numerically close) identical updates."""
     out = run_py("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh, set_mesh
         from repro.configs import get_config, reduced_for_smoke
         from repro.configs.base import ParallelConfig, ShapeConfig
         from repro.training import init_train_state, make_train_step, state_shardings
@@ -81,7 +81,7 @@ def test_microbatch_accumulation_equivalence():
         from repro.data.pipeline import make_pipeline
         from repro.optim import constant
 
-        mesh = jax.make_mesh((2,2), ("data","model"), axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((2,2), ("data","model"))
         cfg = reduced_for_smoke(get_config("mistral-nemo-12b"))
         shape = ShapeConfig("tiny", "train", 32, 8)
         outs = {}
@@ -91,7 +91,7 @@ def test_microbatch_accumulation_equivalence():
             sh = state_shardings(cfg, pcfg, mesh)
             fn = make_train_step(cfg, pcfg, constant(1e-3))
             pipe = make_pipeline(cfg, shape, mesh)
-            with jax.set_mesh(mesh), activation_rules(pcfg, mesh):
+            with set_mesh(mesh), activation_rules(pcfg, mesh):
                 jstep = jax.jit(fn, in_shardings=(sh, None), out_shardings=(sh, None))
                 state, m = jstep(state, pipe.batch_at(0))
             outs[micro] = (float(m["loss"]), state.params)
@@ -111,7 +111,11 @@ def test_injected_failure_restart_cli(tmp_path):
     resumes from the checkpoint."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_cache")
+    # Deliberately points at a persistent compilation cache: on jax 0.4.x a
+    # cache hit on the post-restart re-jit (same process, donated buffers)
+    # corrupts the step — NaN loss then SIGSEGV — so the launcher must
+    # disable it itself (_disable_persistent_compilation_cache).
+    env.setdefault("JAX_COMPILATION_CACHE_DIR", str(tmp_path / "jax_cache"))
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.train",
          "--arch", "granite-moe-1b-a400m", "--reduced",

@@ -4,12 +4,13 @@ tolerance, sharding rules, roofline parsing."""
 import json
 import os
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import checkpointer
 from repro.checkpoint.manager import CheckpointManager
