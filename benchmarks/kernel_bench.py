@@ -140,8 +140,100 @@ def bench_ising_suite() -> list:
     return results
 
 
+def bench_compress_suite() -> dict:
+    """Pooled ``execute_plan`` vs the legacy per-tensor walk on a reduced
+    config — wall time end-to-end (compiles included: both pipelines are
+    offline one-shots and compile count is exactly what pooling amortises)
+    plus the pooled ``solve_many`` batch sizes.  Writes BENCH_compress.json."""
+    import jax.random as jrandom
+
+    from repro import compression as comp
+    from repro.configs import get_config, reduced_for_smoke
+    from repro.models import init_model
+    from repro.models.params import split
+    from repro.compression.plan import tree_paths
+
+    cfg = reduced_for_smoke(get_config("qwen3-32b"))
+    values, _ = split(init_model(jrandom.PRNGKey(0), cfg))
+    key = jrandom.PRNGKey(1)
+    results = []
+    # BBO chunk bound: the CPU sweet spot (surrogate temporaries scale with
+    # the chunk; chunks of 128 beat one 512-tile batch ~1.8x here) while
+    # every chunk stays deep in the >=64-problem regime the Pallas backend
+    # wants on TPU.  On TPU raise it (or pass None) to feed the kernel
+    # maximal batches.
+    bbo_chunk = 128
+    for method, bbo_iters in (("alternating", 0), ("bbo", 6)):
+        policy = comp.CompressionPolicy(
+            method=method, tile_n=16, tile_d=16, rank_ratio=0.375,
+            min_size=4096, bbo_iters=max(bbo_iters, 1),
+        )
+        plan = comp.plan_compression(values, policy)
+        leaves = dict(tree_paths(values))
+
+        # legacy per-tensor walk: one compress_matrix call per tensor slice
+        ccfg = CompressionConfig(
+            tile_n=16, tile_d=16, rank_ratio=0.375, min_size=4096,
+            optimizer=method, bbo_iters=max(bbo_iters, 1),
+        )
+        t0 = time.perf_counter()
+        for t in plan.tensors:
+            k = jrandom.fold_in(key, t.leaf_index)
+            leaf = leaves[t.path]
+            if len(t.shape) == 2:
+                w, _ = compress_matrix(leaf, ccfg, k)
+            else:
+                w = [
+                    compress_matrix(leaf[g], ccfg, jrandom.fold_in(k, g))[0]
+                    for g in range(t.shape[0])
+                ]
+            jax.block_until_ready(w)
+        per_tensor_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        cvals, artifact = comp.execute_plan(
+            plan, values, key=key,
+            max_pool_tiles=bbo_chunk if method == "bbo" else None,
+        )
+        jax.block_until_ready(jax.tree.leaves(cvals))
+        pooled_s = time.perf_counter() - t0
+
+        row = {
+            "method": method,
+            "max_pool_tiles": bbo_chunk if method == "bbo" else None,
+            "tensors": len(plan.tensors),
+            "total_tiles": sum(t.num_tiles for t in plan.tensors),
+            "pools": [
+                {k: p[k] for k in ("tile_n", "tile_d", "K", "method",
+                                   "num_tiles", "num_tensors", "solver_batch")}
+                for p in artifact.manifest["pools"]
+            ],
+            "solver_batches": artifact.solver_batches(),
+            "per_tensor_s": per_tensor_s,
+            "pooled_s": pooled_s,
+            "pooled_speedup": per_tensor_s / pooled_s,
+        }
+        results.append(row)
+        emit(f"compress_{method}_per_tensor", per_tensor_s * 1e6,
+             f"tensors={row['tensors']}")
+        emit(f"compress_{method}_pooled", pooled_s * 1e6,
+             f"pools={len(row['pools'])};solver_batches={row['solver_batches']}")
+
+    out = {
+        "suite": "compress",
+        "device": jax.default_backend(),
+        "config": "qwen3-32b/reduced",
+        "results": results,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_compress.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def run_all() -> None:
     bench_compressed_matmul()
     bench_flash_ref()
     bench_sa_throughput()
     bench_ising_suite()
+    bench_compress_suite()

@@ -1,9 +1,12 @@
 """Train-compress-serve: the paper's technique as a deployment pipeline.
 
   1. train a tiny LM for a few steps (so weights have learned structure),
-  2. compress its linear layers by tile-wise integer decomposition
-     (greedy / alternating / BBO back-ends — the paper's algorithms),
-  3. serve both models and compare memory footprint + agreement.
+  2. plan compression from a policy (per-path rules: attention projections
+     vs MLP weights get different tiles), inspect the predicted ratio,
+  3. execute the plan — tiles pooled across all tensors into batched
+     solves — and save checkpoint + artifact manifest,
+  4. restore through the manifest (no shape-sniffing) and serve both
+     models, comparing memory footprint + agreement.
 
     PYTHONPATH=src python examples/compress_then_serve.py [--method bbo]
 """
@@ -11,15 +14,23 @@
 import argparse
 import dataclasses
 import sys
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, "src")
 
+from repro.checkpoint import checkpointer
+from repro.compression import (
+    CompressionArtifact,
+    CompressionPolicy,
+    CompressionRule,
+    execute_plan,
+    plan_compression,
+)
 from repro.configs import get_config, reduced_for_smoke
-from repro.configs.base import CompressionConfig, ParallelConfig, ShapeConfig
-from repro.core.compress import compress_params
+from repro.configs.base import ParallelConfig, ShapeConfig
 from repro.data.pipeline import make_pipeline
 from repro.distributed.sharding import activation_rules
 from repro.launch.mesh import make_mesh, set_mesh
@@ -55,22 +66,46 @@ def main():
             state, m = jstep(state, pipe.batch_at(i))
     print(f"trained {args.train_steps} steps, loss {float(m['loss']):.3f}")
 
-    # 2. compress
-    ccfg = CompressionConfig(
-        enabled=True, tile_n=8 if args.method == "bbo" else 16,
-        tile_d=64, rank_ratio=args.rank_ratio, min_size=8192,
-        optimizer=args.method, bbo_iters=48,
+    # 2. policy -> plan (pure; printable/diffable before any solver runs)
+    policy = CompressionPolicy(
+        method=args.method,
+        tile_n=8 if args.method == "bbo" else 16,
+        tile_d=128, rank_ratio=args.rank_ratio, min_size=8192, bbo_iters=24,
+        rules=(
+            # attention projections tolerate a lower rank than the MLP
+            CompressionRule(pattern=r"attn/w[qkvo]/w$",
+                            rank_ratio=0.75 * args.rank_ratio, tile_d=64),
+        ),
     )
-    cvals, report = compress_params(state.params, cfg, ccfg)
-    print(f"compressed {len(report.compressed)} tensors with "
-          f"'{args.method}': ratio x{report.total_ratio:.2f}")
-    for pth, ob, nb, err in report.compressed[:6]:
+    plan = plan_compression(state.params, policy)
+    print(plan.summary())
+
+    # 3. execute: tiles pooled across tensors into batched solves.
+    # max_pool_tiles=128 is the CPU sweet spot (BENCH_compress.json): every
+    # BBO chunk is still a >=64-problem solver batch; on TPU raise it.
+    cvals, artifact = execute_plan(plan, state.params,
+                                   key=jax.random.PRNGKey(0),
+                                   max_pool_tiles=128)
+    print(f"compressed {len(artifact.report.compressed)} tensors with "
+          f"'{args.method}': ratio x{artifact.total_ratio:.2f}")
+    for pth, ob, nb, err in artifact.report.compressed[:6]:
         print(f"  {pth:40s} rel_err={err:.3f}")
 
-    # 3. serve both
+    # save + manifest-driven restore (what launch/serve.py does)
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 0, {"params": cvals})
+        artifact.save(d)
+        art2 = CompressionArtifact.load(d)
+        template = {"params": art2.restore_template(state.params)}
+        restored = checkpointer.restore(d, 0, template)["params"]
+    print("manifest round trip: restored compressed checkpoint through "
+          f"{len(art2.manifest['tensors'])}-tensor manifest")
+
+    # 4. serve both (engine validates params against the manifest)
     prompts = jax.random.randint(jax.random.PRNGKey(7), (4, 12), 0, cfg.vocab_size)
     dense = Engine(cfg, state.params, max_len=44, batch=4)
-    comp = Engine(cfg, cvals, max_len=44, batch=4)
+    comp = Engine(cfg, restored, max_len=44, batch=4, artifact=art2)
+    print(f"serving compressed: {comp.compression}")
     out_d = dense.generate(prompts, steps=24)
     out_c = comp.generate(prompts, steps=24)
     agree = float(jnp.mean((out_d[:, 12:] == out_c[:, 12:]).astype(jnp.float32)))

@@ -53,4 +53,24 @@ print(f"storage: {bits} bits vs {W.size * 32} bits dense "
       f"(x{W.size * 32 / bits:.2f} compression at K=3)")
 reconstructed_cost = float(objective(M, W))
 assert abs(reconstructed_cost - res_y) < 1e-5
-print(f"||W - MC||^2 = {reconstructed_cost:.6f}  -> done.")
+print(f"||W - MC||^2 = {reconstructed_cost:.6f}")
+
+# --- scaling it up: the plan stage of the whole-model API ---
+# Planning is pure (no solver): policy rules pick per-path settings and the
+# plan predicts bytes/ratio before any compute is committed.  See
+# docs/compression_api.md; execution pools tiles across tensors into the
+# batched Ising solves benchmarked in BENCH_compress.json.
+from repro.compression import CompressionPolicy, CompressionRule, plan_compression
+
+toy_model = {
+    "attn": {"wq": {"w": jnp.zeros((256, 256))}},
+    "mlp": {"up": {"w": jnp.zeros((256, 1024))}},
+}
+policy = CompressionPolicy(
+    method="greedy", tile_n=32, tile_d=128, rank_ratio=0.125, min_size=1,
+    rules=(CompressionRule(pattern=r"attn", method="bbo", rank_ratio=0.375),),
+)
+plan = plan_compression(toy_model, policy)
+print("\nwhole-model plan (pure, solver-free):")
+print(plan.summary())
+print("-> done.")

@@ -30,7 +30,14 @@ import shutil
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "available_steps"]
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "available_steps",
+    "save_aux",
+    "load_aux",
+]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -91,6 +98,28 @@ def save(directory: str, step: int, tree, process_index: int = 0) -> str:
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def save_aux(directory: str, name: str, obj: dict) -> str:
+    """Atomically write an auxiliary JSON document (e.g. the compression
+    manifest) next to the step directories.  Aux files are step-independent
+    metadata: GC never touches them and restore never requires them."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, name)
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=2)
+    os.replace(tmp, final)
+    return final
+
+
+def load_aux(directory: str, name: str):
+    """Read an auxiliary JSON document; None when absent."""
+    path = os.path.join(directory, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def _index_to_json(index, shape):

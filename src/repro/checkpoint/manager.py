@@ -44,6 +44,13 @@ class CheckpointManager:
             self._pending.result()
             self._pending = None
 
+    # -- aux metadata --------------------------------------------------------
+    def save_aux(self, name: str, obj: dict) -> str:
+        return checkpointer.save_aux(self.directory, name, obj)
+
+    def load_aux(self, name: str):
+        return checkpointer.load_aux(self.directory, name)
+
     # -- restore ------------------------------------------------------------
     def latest_step(self):
         return checkpointer.latest_step(self.directory)

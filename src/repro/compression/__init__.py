@@ -1,0 +1,44 @@
+"""Plan/execute compression API (docs/compression_api.md).
+
+Three stages replace the one-shot ``compress_params`` walk:
+
+  1. **policy**  — :class:`CompressionPolicy`: global defaults + ordered
+     regex path rules deciding method/tile/rank per tensor.
+  2. **plan**    — :func:`plan_compression`: a pure, JSON-serialisable
+     :class:`CompressionPlan` (geometry + predicted bytes, no solver).
+  3. **execute** — :func:`execute_plan`: pools tiles across ALL tensors by
+     (tile_n, tile_d, K, method) into batched solves (optionally sharded
+     over a mesh) and returns the compressed tree + a
+     :class:`CompressionArtifact` whose manifest serving consumes.
+
+``repro.core.compress.compress_params`` remains as a thin back-compat
+wrapper (CompressionConfig -> one-rule policy -> plan -> execute).
+"""
+
+from repro.compression.artifact import (
+    MANIFEST_NAME,
+    CompressionArtifact,
+)
+from repro.compression.execute import execute_plan
+from repro.compression.plan import (
+    CompressionPlan,
+    TensorPlan,
+    plan_compression,
+)
+from repro.compression.policy import (
+    DEFAULT_EXCLUDE,
+    CompressionPolicy,
+    CompressionRule,
+)
+
+__all__ = [
+    "CompressionPolicy",
+    "CompressionRule",
+    "DEFAULT_EXCLUDE",
+    "CompressionPlan",
+    "TensorPlan",
+    "plan_compression",
+    "execute_plan",
+    "CompressionArtifact",
+    "MANIFEST_NAME",
+]

@@ -1,0 +1,176 @@
+"""Compression artifact: the serving-consumable manifest.
+
+``execute_plan`` returns a :class:`CompressionArtifact` whose ``manifest``
+records, per compressed tensor, the tile geometry, method, byte counts,
+relative error and — crucially for serving — the exact shapes/dtypes of the
+stored ``{"m_packed", "C"}`` leaves.  The manifest is saved as
+``compression_manifest.json`` next to the checkpoint step directories, and
+``launch/serve.py`` / ``serving.engine.Engine`` consume it instead of
+sniffing shapes:
+
+  * restore — a compressed checkpoint's tree structure differs from the
+    dense template (a weight leaf becomes a two-leaf dict), so a dense
+    ``like_tree`` cannot restore it.  :meth:`restore_template` rewrites the
+    dense template from the manifest, making compressed checkpoints
+    restorable without re-running compression.
+  * validation — :meth:`validate_params` checks a params tree against the
+    manifest (paths present, compressed, shapes matching) so the engine
+    fails loudly on a manifest/checkpoint mismatch instead of serving
+    garbage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+
+from repro.core.compress import CompressionReport
+
+__all__ = ["CompressionArtifact", "MANIFEST_NAME", "MANIFEST_FORMAT"]
+
+MANIFEST_NAME = "compression_manifest.json"
+MANIFEST_FORMAT = "repro.compression/v1"
+
+
+@dataclasses.dataclass
+class CompressionArtifact:
+    manifest: dict
+
+    def __post_init__(self):
+        fmt = self.manifest.get("format")
+        if fmt != MANIFEST_FORMAT:
+            raise ValueError(
+                f"unsupported compression manifest format {fmt!r} "
+                f"(expected {MANIFEST_FORMAT!r})"
+            )
+
+    # -- report compatibility ----------------------------------------------
+    @property
+    def report(self) -> CompressionReport:
+        """The legacy ``CompressionReport`` view of the manifest."""
+        compressed = [
+            (path, e["orig_bytes"], e["new_bytes"], e["rel_err"])
+            for path, e in self.manifest["tensors"].items()
+        ]
+        skipped = list(self.manifest["skipped"].items())
+        return CompressionReport(compressed, skipped)
+
+    @property
+    def total_ratio(self) -> float:
+        return self.manifest["totals"]["ratio"]
+
+    def solver_batches(self) -> list:
+        """Actual pooled ``solve_many`` batch sizes, one entry per BBO
+        chunk (the final chunk of a pool may be smaller than the bound)."""
+        return [
+            size
+            for p in self.manifest["pools"]
+            if p.get("solver_batch")
+            for size in p.get("chunk_sizes", [p["solver_batch"]])
+        ]
+
+    def summary(self) -> str:
+        t = self.manifest["totals"]
+        lines = [
+            f"CompressionArtifact: {len(self.manifest['tensors'])} tensors, "
+            f"{t['orig_bytes'] / 2**20:.2f} -> {t['new_bytes'] / 2**20:.2f} MiB "
+            f"(x{t['ratio']:.2f})"
+        ]
+        for path, e in self.manifest["tensors"].items():
+            lines.append(
+                f"  {path:48s} {e['method']:11s} tile "
+                f"{e['tile_n']}x{e['tile_d']} K={e['K']} rel_err {e['rel_err']:.3f}"
+            )
+        return "\n".join(lines)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Write the manifest next to the checkpoint step directories."""
+        from repro.checkpoint import checkpointer
+
+        return checkpointer.save_aux(directory, MANIFEST_NAME, self.manifest)
+
+    @classmethod
+    def load(cls, directory: str) -> "CompressionArtifact":
+        from repro.checkpoint import checkpointer
+
+        manifest = checkpointer.load_aux(directory, MANIFEST_NAME)
+        if manifest is None:
+            raise FileNotFoundError(
+                f"no {MANIFEST_NAME} in {directory!r}"
+            )
+        return cls(manifest)
+
+    @classmethod
+    def exists(cls, directory: str) -> bool:
+        return os.path.exists(os.path.join(directory, MANIFEST_NAME))
+
+    # -- serving consumption ------------------------------------------------
+    def restore_template(self, dense_values):
+        """Rewrite a dense values tree into the compressed checkpoint's
+        structure: each manifest tensor leaf becomes
+        ``{"m_packed": ShapeDtypeStruct, "C": ShapeDtypeStruct}``."""
+        entries = self.manifest["tensors"]
+
+        def rewrite(tree, prefix):
+            if isinstance(tree, dict):
+                return {
+                    k: rewrite(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()
+                }
+            if isinstance(tree, (list, tuple)):
+                seq = [
+                    rewrite(v, f"{prefix}/{i}" if prefix else str(i))
+                    for i, v in enumerate(tree)
+                ]
+                return type(tree)(seq)
+            e = entries.get(prefix)
+            if e is None:
+                return tree
+            if tuple(e["shape"]) != tuple(np.shape(tree)):
+                raise ValueError(
+                    f"manifest/template shape mismatch at {prefix!r}: "
+                    f"{tuple(e['shape'])} vs {tuple(np.shape(tree))}"
+                )
+            return {
+                "m_packed": jax.ShapeDtypeStruct(
+                    tuple(e["m_packed"]["shape"]), np.dtype(e["m_packed"]["dtype"])
+                ),
+                "C": jax.ShapeDtypeStruct(
+                    tuple(e["C"]["shape"]), np.dtype(e["C"]["dtype"])
+                ),
+            }
+
+        return rewrite(dense_values, "")
+
+    def validate_params(self, params) -> list:
+        """Mismatches between the manifest and a params tree ([] == valid).
+        A compressed weight flattens to two leaves, ``<path>/m_packed`` and
+        ``<path>/C`` — the manifest pins their shapes."""
+        from repro.compression.plan import tree_paths
+
+        leaves = dict(tree_paths(params))
+        problems = []
+        for path, e in self.manifest["tensors"].items():
+            mp, cp = f"{path}/m_packed", f"{path}/C"
+            if mp not in leaves or cp not in leaves:
+                problems.append(f"{path}: not compressed in params")
+                continue
+            for leaf_path, leaf, spec in (
+                (mp, leaves[mp], e["m_packed"]),
+                (cp, leaves[cp], e["C"]),
+            ):
+                if tuple(leaf.shape) != tuple(spec["shape"]):
+                    problems.append(
+                        f"{leaf_path}: shape {tuple(leaf.shape)} != "
+                        f"manifest {tuple(spec['shape'])}"
+                    )
+                elif str(leaf.dtype) != spec["dtype"]:
+                    problems.append(
+                        f"{leaf_path}: dtype {leaf.dtype} != "
+                        f"manifest {spec['dtype']}"
+                    )
+        return problems

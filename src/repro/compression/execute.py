@@ -1,0 +1,268 @@
+"""Execute stage: run a :class:`CompressionPlan` with cross-tensor pooling.
+
+The legacy walk compressed one tensor at a time, so the batched Ising
+backend (``ising.solve_many``) only ever saw one tensor's tiles per call.
+``execute_plan`` instead pools tiles from *every* planned tensor by
+(tile_n, tile_d, K, method) and runs each pool as ONE
+``compress_tile_batch`` call — one vmapped greedy/alternating
+decomposition, and for BBO one ``run_bbo_many`` whose per-iteration
+``solve_many`` batch is the whole pool (the ≥64-problem regime where the
+Pallas backend wins, BENCH_ising.json).  The pooled tile axis can
+optionally be sharded over a mesh, which is how "shard the problem axis of
+``solve_many``" lands: GSPMD partitions every per-tile op (and the solver
+chain axis) across devices.
+
+Reproducibility contract: per-tile PRNG keys are derived exactly as the
+legacy per-tensor walk derived them (fold_in(key, leaf_index) per tensor,
+fold_in per group slice, split over tiles), so greedy/alternating pooled
+output is bit-identical to per-tensor ``compress_matrix`` with the same
+seed.  BBO pools share one lock-step run per pool, so its results are
+deterministic per (plan, seed) but not equal to the per-tensor walk —
+see docs/compression_api.md.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compression.artifact import CompressionArtifact, MANIFEST_FORMAT
+from repro.compression.plan import CompressionPlan, TensorPlan, tree_paths
+from repro.core import decomposition as dec
+from repro.core import quantized
+from repro.core.compress import compress_tile_batch, tile_matrix
+
+__all__ = ["execute_plan"]
+
+
+def _validate(plan: CompressionPlan, leaves: dict) -> None:
+    for t in plan.tensors:
+        if t.path not in leaves:
+            raise ValueError(f"plan tensor {t.path!r} not found in values tree")
+        leaf = leaves[t.path]
+        if tuple(leaf.shape) != t.shape:
+            raise ValueError(
+                f"plan/values shape mismatch at {t.path!r}: "
+                f"planned {t.shape}, got {tuple(leaf.shape)}"
+            )
+
+
+def _tensor_keys(key, t: TensorPlan):
+    """Per-tile keys for one tensor, exactly as the legacy walk drew them."""
+    k = jax.random.fold_in(key, t.leaf_index)
+    tiles_per_slice = t.num_tiles // t.groups
+    if len(t.shape) == 3:
+        slice_keys = [jax.random.fold_in(k, g) for g in range(t.groups)]
+    else:
+        slice_keys = [k]
+    return jnp.concatenate(
+        [jax.random.split(sk, tiles_per_slice) for sk in slice_keys]
+    )
+
+
+def _tensor_tiles(leaf, t: TensorPlan):
+    """(num_tiles, tn, td) stack across group slices (g-major, r/c-minor)."""
+    if len(t.shape) == 3:
+        stacks = [tile_matrix(leaf[g], t.tile_n, t.tile_d) for g in range(t.groups)]
+        return jnp.concatenate(stacks)
+    return tile_matrix(leaf, t.tile_n, t.tile_d)
+
+
+def _iter_chunks(members, leaves, key, chunk):
+    """Assemble (tiles, keys) chunks of at most ``chunk`` tiles, walking the
+    pool's tensors in order WITHOUT concatenating the whole pool first —
+    at most one tensor's tile stack plus one chunk is in flight, which is
+    what keeps ``max_pool_tiles`` an actual memory bound."""
+    buf_t, buf_k, n = [], [], 0
+    for t in members:
+        tiles = _tensor_tiles(leaves[t.path], t)
+        keys = _tensor_keys(key, t)
+        pos = 0
+        while pos < t.num_tiles:
+            take = min(chunk - n, t.num_tiles - pos)
+            buf_t.append(tiles[pos:pos + take])
+            buf_k.append(keys[pos:pos + take])
+            n += take
+            pos += take
+            if n == chunk:
+                yield jnp.concatenate(buf_t), jnp.concatenate(buf_k)
+                buf_t, buf_k, n = [], [], 0
+    if n:
+        yield jnp.concatenate(buf_t), jnp.concatenate(buf_k)
+
+
+def _shard_pool(tiles, keys, mesh):
+    """Shard the pooled tile axis over every mesh axis.  Returns
+    (tiles, keys, sharded); when the chunk doesn't divide the device count
+    it replicates (correctness first) and the caller warns — a silent
+    no-op would masquerade as a sharded solve."""
+    n_dev = math.prod(mesh.devices.shape)
+    if n_dev <= 1 or tiles.shape[0] % n_dev:
+        return tiles, keys, n_dev <= 1
+    axes = tuple(mesh.axis_names)
+    tiles = jax.device_put(tiles, NamedSharding(mesh, P(axes, None, None)))
+    keys = jax.device_put(keys, NamedSharding(mesh, P(axes)))
+    return tiles, keys, True
+
+
+def _pack_tensor(t: TensorPlan, M_seg, C_seg, dtype):
+    """Pooled rows for one tensor -> the {"m_packed", "C"} leaf."""
+    r, c = t.d_in // t.tile_n, t.d_out // t.tile_d
+    packed = jax.vmap(dec.pack_bits)(M_seg)
+    if len(t.shape) == 3:
+        packed = packed.reshape(t.groups, r, c, t.tile_n, -1)
+        C_out = C_seg.reshape(t.groups, r, c, t.K, t.tile_d).astype(dtype)
+    else:
+        packed = packed.reshape(r, c, t.tile_n, -1)
+        C_out = C_seg.reshape(r, c, t.K, t.tile_d).astype(dtype)
+    return {"m_packed": packed, "C": C_out}
+
+
+def execute_plan(
+    plan: CompressionPlan,
+    values,
+    *,
+    key=None,
+    mesh=None,
+    backend: str | None = None,
+    max_pool_tiles: int | None = 4096,
+    verbose: bool = False,
+):
+    """Execute ``plan`` over ``values``; returns (new_values, artifact).
+
+    ``backend`` overrides the policy's Ising solver backend
+    ("auto" | "pallas" | "jnp"); ``mesh`` shards the pooled tile axis.
+    ``max_pool_tiles`` bounds the tiles per batched solve: the legacy walk
+    never held more than one tensor's tiles, but a pool concentrates the
+    whole model, whose BBO surrogate state scales as
+    O(tiles * num_features^2) — chunking keeps memory bounded while every
+    chunk is still a large batch.  Chunking never changes
+    greedy/alternating results (per-tile keys); BBO results depend on the
+    chunk boundaries (each chunk is its own lock-step run).
+    The artifact's manifest records per-tensor geometry/bytes/errors and
+    per-pool solver batch sizes, and is the serving-consumable description
+    of the compressed checkpoint (:mod:`repro.compression.artifact`).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    backend = backend or plan.policy.solver_backend
+
+    leaves = dict(tree_paths(values))
+    _validate(plan, leaves)
+
+    # -- pool tiles across tensors -----------------------------------------
+    pools = plan.pools()
+    results = {}       # path -> (M_seg, C_seg, err_seg)
+    pool_stats = []
+    for pidx, (pool_key, members) in enumerate(pools.items()):
+        tn, td, K, method, bbo_iters = pool_key
+        total = sum(t.num_tiles for t in members)
+        chunk = total if not max_pool_tiles else min(total, max_pool_tiles)
+        n_chunks = -(-total // chunk)
+        bbo_key = jax.random.fold_in(jax.random.fold_in(key, 0x706F6F6C), pidx)
+        parts, chunk_sizes = [], []
+        for ci, (ct, ck) in enumerate(_iter_chunks(members, leaves, key, chunk)):
+            if mesh is not None:
+                ct, ck, sharded = _shard_pool(ct, ck, mesh)
+                if not sharded:
+                    print(
+                        f"[compress] pool {method} {tn}x{td} K={K} chunk "
+                        f"{ci}: {ct.shape[0]} tiles do not divide the "
+                        f"{math.prod(mesh.devices.shape)}-device mesh; "
+                        "running replicated"
+                    )
+            chunk_sizes.append(int(ct.shape[0]))
+            parts.append(compress_tile_batch(
+                ct, ck, jax.random.fold_in(bbo_key, ci), K, method,
+                bbo_iters=max(bbo_iters, 1), backend=backend,
+            ))
+        if len(parts) == 1:
+            M, C, errs = parts[0]
+        else:
+            M, C, errs = (jnp.concatenate(xs) for xs in zip(*parts))
+        start = 0
+        for t in members:
+            stop = start + t.num_tiles
+            results[t.path] = (M[start:stop], C[start:stop], errs[start:stop])
+            start = stop
+        pool_stats.append({
+            "tile_n": tn, "tile_d": td, "K": K, "method": method,
+            "num_tiles": total,
+            "num_tensors": len(members),
+            "chunks": n_chunks,
+            # For BBO every lock-step iteration issues ONE solve_many over a
+            # whole chunk: the actual per-call batch sizes (the final chunk
+            # may be smaller than the bound).
+            "chunk_sizes": chunk_sizes,
+            "solver_batch": max(chunk_sizes) if method == "bbo" else None,
+            "bbo_iters": bbo_iters,
+            "solver_calls": bbo_iters * n_chunks if method == "bbo" else 0,
+        })
+        if verbose:
+            print(
+                f"  pool {method} {tn}x{td} K={K}: {total} tiles "
+                f"from {len(members)} tensors ({n_chunks} chunk(s))"
+            )
+
+    # -- scatter back into the tree ----------------------------------------
+    flat, treedef = jax.tree_util.tree_flatten_with_path(values)
+    planned = {t.path: t for t in plan.tensors}
+    paths = [p for p, _ in tree_paths(values)]
+    out, manifest_tensors = [], {}
+    compressed, report_skipped = [], list(plan.skipped)
+    for path, (_, leaf) in zip(paths, flat):
+        t = planned.get(path)
+        if t is None:
+            out.append(leaf)
+            continue
+        M_seg, C_seg, err_seg = results[path]
+        w = _pack_tensor(t, M_seg, C_seg, leaf.dtype)
+        nb = quantized.compressed_num_bytes(w)
+        err = float(jnp.mean(err_seg))
+        compressed.append((path, t.orig_bytes, nb, err))
+        manifest_tensors[path] = {
+            "shape": list(t.shape),
+            "dtype": t.dtype,
+            "groups": t.groups,
+            "tile_n": t.tile_n,
+            "tile_d": t.tile_d,
+            "K": t.K,
+            "method": t.method,
+            "rule": t.rule,
+            "num_tiles": t.num_tiles,
+            "orig_bytes": t.orig_bytes,
+            "new_bytes": int(nb),
+            "rel_err": err,
+            "m_packed": {
+                "shape": list(w["m_packed"].shape),
+                "dtype": str(w["m_packed"].dtype),
+            },
+            "C": {"shape": list(w["C"].shape), "dtype": str(w["C"].dtype)},
+        }
+        out.append(w)
+        if verbose:
+            print(
+                f"  compressed {path}: x{t.orig_bytes / max(nb, 1):.1f}, "
+                f"rel_err {err:.3f}"
+            )
+
+    ob = sum(c[1] for c in compressed)
+    nb_total = sum(c[2] for c in compressed)
+    manifest = {
+        "format": MANIFEST_FORMAT,
+        "policy": plan.policy.to_dict(),
+        "solver_backend": backend,
+        "tensors": manifest_tensors,
+        "skipped": {p: r for p, r in report_skipped},
+        "pools": pool_stats,
+        "totals": {
+            "orig_bytes": int(ob),
+            "new_bytes": int(nb_total),
+            "ratio": ob / max(nb_total, 1),
+        },
+    }
+    artifact = CompressionArtifact(manifest)
+    return jax.tree_util.tree_unflatten(treedef, out), artifact

@@ -1,0 +1,260 @@
+"""Plan stage: a pure, serialisable description of a compression run.
+
+``plan_compression(values, policy)`` walks a model values tree and produces
+a :class:`CompressionPlan` — per-tensor tile geometry, method and predicted
+bytes/ratio (via the byte-costing helpers in ``repro.launch.costing``) —
+without touching a solver.  Plans can be printed (:meth:`summary`), diffed
+(:meth:`diff`), JSON round-tripped and unit-tested; ``execute_plan``
+(:mod:`repro.compression.execute`) is the only stage that runs numerics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.compression.policy import CompressionPolicy
+from repro.core.compress import pick_tile
+
+__all__ = ["TensorPlan", "CompressionPlan", "plan_compression", "tree_paths"]
+
+# BBO tiles stay at the paper's n = 8K-spin scale: want 8 rows, never more
+# than 16 (BOCS surrogate cost grows O(n^5)-ish with spins = tile_n * K).
+_BBO_TILE_N_WANT = 8
+_BBO_TILE_N_MAX = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPlan:
+    """How one eligible tensor will be compressed.
+
+    ``leaf_index`` is the tensor's position in the flattened values tree —
+    it seeds the per-tensor PRNG fold exactly like the legacy per-tensor
+    walk, which is what makes pooled execution bit-reproducible against it.
+    ``groups`` is the leading stack dim for (G, d_in, d_out) weights (1 for
+    plain 2D).  ``num_tiles`` counts tiles across all group slices.
+    """
+
+    path: str
+    leaf_index: int
+    shape: tuple
+    dtype: str
+    groups: int
+    tile_n: int
+    tile_d: int
+    K: int
+    method: str
+    rule: str
+    num_tiles: int
+    orig_bytes: int
+    pred_bytes: int
+    bbo_iters: int = 0        # resolved refinement budget (bbo only)
+
+    @property
+    def pred_ratio(self) -> float:
+        return self.orig_bytes / max(self.pred_bytes, 1)
+
+    @property
+    def d_in(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def d_out(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def pool_key(self) -> tuple:
+        """Tiles with the same (tile_n, tile_d, K, method, bbo_iters) are
+        one batched solve regardless of which tensor they came from (the
+        refinement budget is part of the key so a rule raising bbo_iters
+        for some tensors keeps them out of lower-budget pools)."""
+        return (self.tile_n, self.tile_d, self.K, self.method, self.bbo_iters)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """The full planned workload: tensors to compress, tensors left dense
+    (with reasons), and the policy that produced it."""
+
+    tensors: tuple        # ordered TensorPlan (leaf order)
+    skipped: tuple        # ((path, reason), ...)
+    policy: CompressionPolicy
+
+    # -- aggregates ---------------------------------------------------------
+    @property
+    def total_orig_bytes(self) -> int:
+        return sum(t.orig_bytes for t in self.tensors)
+
+    @property
+    def total_pred_bytes(self) -> int:
+        return sum(t.pred_bytes for t in self.tensors)
+
+    @property
+    def pred_ratio(self) -> float:
+        return self.total_orig_bytes / max(self.total_pred_bytes, 1)
+
+    def pools(self) -> dict:
+        """pool_key -> list[TensorPlan], insertion-ordered.  Each pool
+        becomes one (chunked) ``compress_tile_batch`` stream in execute."""
+        out: dict = {}
+        for t in self.tensors:
+            out.setdefault(t.pool_key, []).append(t)
+        return out
+
+    # -- presentation -------------------------------------------------------
+    def summary(self) -> str:
+        lines = [
+            f"CompressionPlan: {len(self.tensors)} tensors, "
+            f"{len(self.skipped)} skipped, "
+            f"{self.total_orig_bytes / 2**20:.2f} -> "
+            f"{self.total_pred_bytes / 2**20:.2f} MiB "
+            f"(predicted x{self.pred_ratio:.2f})"
+        ]
+        for t in self.tensors:
+            rule = f"  [{t.rule}]" if t.rule else ""
+            lines.append(
+                f"  {t.path:48s} {t.method:11s} tile {t.tile_n}x{t.tile_d} "
+                f"K={t.K} tiles={t.num_tiles} x{t.pred_ratio:.1f}{rule}"
+            )
+        for key, members in self.pools().items():
+            tn, td, K, method = key[:4]
+            lines.append(
+                f"  pool {method} {tn}x{td} K={K}: "
+                f"{sum(m.num_tiles for m in members)} tiles "
+                f"from {len(members)} tensors"
+            )
+        for path, reason in self.skipped:
+            lines.append(f"  [skip] {path}: {reason}")
+        return "\n".join(lines)
+
+    def diff(self, other: "CompressionPlan") -> list:
+        """Human-readable per-path differences vs ``other``."""
+        mine = {t.path: t for t in self.tensors}
+        theirs = {t.path: t for t in other.tensors}
+        out = []
+        for path in sorted(set(mine) | set(theirs)):
+            a, b = mine.get(path), theirs.get(path)
+            if a is None:
+                out.append(f"+ {path}: only in other")
+            elif b is None:
+                out.append(f"- {path}: only in self")
+            elif a != b:
+                fields = [
+                    f.name for f in dataclasses.fields(TensorPlan)
+                    if getattr(a, f.name) != getattr(b, f.name)
+                ]
+                out.append(f"~ {path}: {', '.join(fields)}")
+        return out
+
+    # -- serialisation ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "format": "repro.compression.plan/v1",
+            "policy": self.policy.to_dict(),
+            "tensors": [
+                {**dataclasses.asdict(t), "shape": list(t.shape)}
+                for t in self.tensors
+            ],
+            "skipped": [list(s) for s in self.skipped],
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CompressionPlan":
+        tensors = tuple(
+            TensorPlan(**{**t, "shape": tuple(t["shape"])})
+            for t in d["tensors"]
+        )
+        skipped = tuple((p, r) for p, r in d["skipped"])
+        return cls(tensors, skipped, CompressionPolicy.from_dict(d["policy"]))
+
+    @classmethod
+    def from_json(cls, s: str) -> "CompressionPlan":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+
+def tree_paths(values):
+    """[(path, leaf)] in flat leaf order, "/"-joined key path — the same
+    enumeration the legacy per-tensor walk used (leaf index seeds PRNG)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(values)
+    return [
+        (
+            "/".join(
+                str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                for p in pth
+            ),
+            leaf,
+        )
+        for pth, leaf in flat
+    ]
+
+
+def _structurally_eligible(path: str, leaf) -> bool:
+    return path.endswith("/w") and getattr(leaf, "ndim", 0) in (2, 3)
+
+
+def plan_compression(values, policy: CompressionPolicy) -> CompressionPlan:
+    """Pure planning pass: no solver runs, no tensor data is read beyond
+    shape/dtype.  Returns a :class:`CompressionPlan`."""
+    from repro.launch import costing
+
+    tensors, skipped = [], []
+    for i, (path, leaf) in enumerate(tree_paths(values)):
+        if not _structurally_eligible(path, leaf):
+            continue
+        settings = policy.resolve(path)
+        if settings is None:
+            skipped.append((path, policy.skip_reason(path)))
+            continue
+        groups = leaf.shape[0] if leaf.ndim == 3 else 1
+        d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+        # the per-slice size is the gate (as the legacy per-slice
+        # compress_matrix walk applied it): a (G, d_in, d_out) stack is G
+        # independent d_in x d_out problems
+        if d_in * d_out < settings.min_size:
+            skipped.append((path, "below min_size"))
+            continue
+        if settings.method == "bbo":
+            tn = pick_tile(d_in, _BBO_TILE_N_WANT, max_tile=_BBO_TILE_N_MAX)
+        else:
+            tn = pick_tile(d_in, settings.tile_n)
+        td = pick_tile(d_out, settings.tile_d)
+        if tn is None or td is None:
+            skipped.append((path, f"indivisible dims {tuple(leaf.shape)}"))
+            continue
+        K = max(int(round(settings.rank_ratio * tn)), 1)
+        if K >= tn:
+            skipped.append((path, "K >= tile_n (no compression)"))
+            continue
+        itemsize = np.dtype(leaf.dtype).itemsize
+        tensors.append(
+            TensorPlan(
+                path=path,
+                leaf_index=i,
+                shape=tuple(int(s) for s in leaf.shape),
+                dtype=str(leaf.dtype),
+                groups=int(groups),
+                tile_n=tn,
+                tile_d=td,
+                K=K,
+                method=settings.method,
+                rule=settings.rule,
+                num_tiles=int(groups * (d_in // tn) * (d_out // td)),
+                orig_bytes=costing.dense_weight_bytes(leaf.shape, itemsize),
+                pred_bytes=costing.compressed_weight_bytes(
+                    d_in, d_out, tn, td, K, itemsize, groups=groups
+                ),
+                bbo_iters=settings.bbo_iters if settings.method == "bbo" else 0,
+            )
+        )
+    return CompressionPlan(tuple(tensors), tuple(skipped), policy)

@@ -37,6 +37,14 @@ class CompressionConfig:
     bbo_iters: int = 64        # only for optimizer="bbo"
     solver_backend: str = "auto"    # Ising backend for bbo: auto | pallas | jnp
 
+    def to_policy(self):
+        """One-rule :class:`repro.compression.CompressionPolicy` adapter:
+        every tensor gets this config's single method/tile/rank (the legacy
+        ``compress_params`` semantics)."""
+        from repro.compression.policy import CompressionPolicy
+
+        return CompressionPolicy.from_config(self)
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:

@@ -9,32 +9,39 @@ over the mesh under pjit) with one of three back-ends:
   greedy       the paper's original algorithm (Eq. 5)            [fastest]
   alternating  greedy init + exact per-row block-coordinate descent
   bbo          alternating init + nBOCS/SA refinement — the paper's
-               contribution; tile_n is forced to 8 so each tile is exactly
+               contribution; tile_n defaults to 8 so each tile is exactly
                the paper's n = 8K-spin problem scale (BOCS is O(n^5): the
                tiling is what makes the technique deployable on real
                matrices, answering the paper's closing scalability concern)
 
-``compress_params`` walks a model values tree and replaces every eligible
-2D (or group-stacked 3D) linear weight with the {"m_packed", "C"} compressed
-form consumed by layers.apply_dense / kernels.bitlinear.
+This module holds the per-tile numerical core (``compress_tile_batch``) and
+the single-matrix entry point (``compress_matrix``).  Whole-model
+compression lives in :mod:`repro.compression` — a plan/execute API that
+pools tiles across tensors into large batched solves; ``compress_params``
+below is kept as a thin back-compat wrapper over it.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import CompressionConfig, ModelConfig
 from repro.core import bbo as bbo_lib
 from repro.core import decomposition as dec
-from repro.core import quantized
 
-__all__ = ["compress_matrix", "compress_params", "CompressionReport", "tile_matrix"]
+__all__ = [
+    "compress_matrix",
+    "compress_params",
+    "compress_tile_batch",
+    "CompressionReport",
+    "tile_matrix",
+    "pick_tile",
+]
 
 
 class CompressionReport(NamedTuple):
@@ -48,11 +55,34 @@ class CompressionReport(NamedTuple):
         return ob / max(nb, 1)
 
 
-def _pick_tile(dim: int, want: int) -> int | None:
-    for t in (want, want // 2, want // 4, want * 2):
-        if t and t >= 4 and dim % t == 0:
-            return t
-    return None
+def pick_tile(dim: int, want: int, max_tile: int | None = None) -> int | None:
+    """The divisor of ``dim`` (>= 4) whose log-ratio to ``want`` is smallest.
+
+    Searching *all* divisors (rather than a fixed {want, want//2, want//4,
+    want*2} ladder) means awkward dimensions like 48, 100 or 12 still get a
+    sensible tile instead of falling into ``skipped``.  Candidates stay
+    within the legacy ladder's envelope [want/4, want*4] (log distance
+    <= 2): a divisor far from ``want`` is worse than skipping — e.g. a
+    prime-ish dim like 1018 only divides by 509, whose K = ratio*509 would
+    blow up alternating's 2^K row enumeration.  Ties prefer the smaller
+    divisor (finer tiles pool better and keep BBO instances small);
+    ``max_tile`` caps the search (the BBO path caps at 16 so the per-tile
+    Ising problem stays at the paper's n = 8K scale).
+    """
+    best, best_d = None, None
+    hi = dim if max_tile is None else min(dim, max_tile)
+    for t in range(4, hi + 1):
+        if dim % t:
+            continue
+        d = abs(math.log2(t / want))
+        if d > 2.0 + 1e-9:          # outside the [want/4, want*4] envelope
+            continue
+        if best is None or d < best_d - 1e-12:
+            best, best_d = t, d
+    return best
+
+
+_pick_tile = pick_tile  # back-compat alias (pre-plan-API name)
 
 
 def tile_matrix(W: jax.Array, tn: int, td: int) -> jax.Array:
@@ -67,20 +97,32 @@ def _untile_meta(W_shape, tn, td):
     return W_shape[0] // tn, W_shape[1] // td
 
 
-@functools.partial(jax.jit, static_argnames=("K", "method", "bbo_iters", "backend"))
-def _compress_tiles(
-    tiles: jax.Array, K: int, method: str, key, bbo_iters: int = 64,
+@functools.partial(
+    jax.jit, static_argnames=("K", "method", "bbo_iters", "backend")
+)
+def compress_tile_batch(
+    tiles: jax.Array,
+    keys: jax.Array,
+    pool_key: jax.Array,
+    K: int,
+    method: str,
+    bbo_iters: int = 64,
     backend: str = "auto",
 ):
-    """tiles (T, tn, td) -> (M (T, tn, K), C (T, K, td), rel_err (T,)).
+    """tiles (T, tn, td), per-tile ``keys`` (T,) -> (M (T, tn, K),
+    C (T, K, td), rel_err (T,)).
 
-    The BBO refinement runs all tiles in lock-step through
+    The per-tile keys drive the greedy/alternating init, so a batch built by
+    concatenating tile stacks from *different* tensors (the pooled execute
+    path in :mod:`repro.compression.execute`) is bit-identical to running
+    each stack separately with the same keys.  ``pool_key`` seeds the BBO
+    refinement, which runs all T tiles in lock-step through
     ``bbo_lib.run_bbo_many``: per iteration the T surrogates are fitted
     under vmap and the T Ising instances are solved by one batched
-    ``ising.solve_many`` call (``backend`` selects jnp vs Pallas)."""
+    ``ising.solve_many`` call (``backend`` selects jnp vs Pallas).
+    """
     tiles = tiles.astype(jnp.float32)
     T, tn, _ = tiles.shape
-    keys = jax.random.split(key, T)
 
     def init_one(W_t, k):
         M = dec.greedy_decompose(W_t, K, k).M
@@ -103,7 +145,7 @@ def _compress_tiles(
                 tiles, xs
             )
 
-        res = bbo_lib.run_bbo_many(jax.random.fold_in(key, 1), cfg, f_batch, T)
+        res = bbo_lib.run_bbo_many(pool_key, cfg, f_batch, T)
         x_bbo = res.best_x.reshape(T, tn, K)
         better = res.best_y < jax.vmap(lambda M_t, W_t: dec.objective(M_t, W_t))(
             M, tiles
@@ -116,6 +158,18 @@ def _compress_tiles(
         / jnp.maximum(jnp.linalg.norm(W_t), 1e-30)
     )(M, tiles)
     return M, C, err
+
+
+def _compress_tiles(
+    tiles: jax.Array, K: int, method: str, key, bbo_iters: int = 64,
+    backend: str = "auto",
+):
+    """Back-compat single-tensor form: derives per-tile keys from ``key``."""
+    keys = jax.random.split(key, tiles.shape[0])
+    return compress_tile_batch(
+        tiles, keys, jax.random.fold_in(key, 1), K, method,
+        bbo_iters=bbo_iters, backend=backend,
+    )
 
 
 def compress_matrix(
@@ -131,8 +185,8 @@ def compress_matrix(
     if W.size < ccfg.min_size:
         return None, "below min_size"
     tn_want = 8 if method == "bbo" else ccfg.tile_n
-    tn = _pick_tile(W.shape[0], tn_want)
-    td = _pick_tile(W.shape[1], ccfg.tile_d)
+    tn = pick_tile(W.shape[0], tn_want, max_tile=16 if method == "bbo" else None)
+    td = pick_tile(W.shape[1], ccfg.tile_d)
     if tn is None or td is None:
         return None, f"indivisible dims {tuple(W.shape)}"
     K = max(int(round(ccfg.rank_ratio * tn)), 1)
@@ -152,16 +206,8 @@ def compress_matrix(
 
 
 # ---------------------------------------------------------------------------
-# Whole-model compression
+# Whole-model compression (back-compat wrapper over repro.compression)
 # ---------------------------------------------------------------------------
-
-_EXCLUDE_TOKENS = ("norm", "router", "embed", "conv", "A_log", "dt_bias", "D")
-
-
-def _eligible(path: str, leaf) -> bool:
-    if any(t in path for t in _EXCLUDE_TOKENS):
-        return False
-    return path.endswith("/w") and leaf.ndim in (2, 3)
 
 
 def compress_params(
@@ -173,54 +219,18 @@ def compress_params(
 ):
     """Walk the model values tree; compress eligible linear weights.
 
-    Group-stacked (G, d_in, d_out) weights are compressed per slice (vmap
-    would multiply compile variants; a python loop over G is fine since
-    compression is offline).  Returns (new_values, CompressionReport).
+    Thin wrapper over the plan/execute API: the ``CompressionConfig`` becomes
+    a one-rule :class:`repro.compression.CompressionPolicy`, the tree is
+    planned, and the plan executes with tiles *pooled across tensors* into
+    batched solves (bit-identical per tensor to the old one-tensor-at-a-time
+    walk for greedy/alternating; see tests/test_compression_api.py).
+    Returns (new_values, CompressionReport).
     """
+    from repro import compression as comp
+
     ccfg = ccfg or cfg.compression
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(values)
-    out, compressed, skipped = [], [], []
-    for i, (pth, leaf) in enumerate(flat):
-        path = "/".join(
-            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
-            for p in pth
-        )
-        if not _eligible(path, leaf):
-            out.append(leaf)
-            continue
-        k = jax.random.fold_in(key, i)
-        if leaf.ndim == 2:
-            w, info = compress_matrix(leaf, ccfg, k)
-            if w is None:
-                skipped.append((path, info))
-                out.append(leaf)
-                continue
-            nb = quantized.compressed_num_bytes(w)
-            ob = leaf.size * leaf.dtype.itemsize
-            compressed.append((path, ob, nb, info))
-            out.append(w)
-        else:  # (G, d_in, d_out)
-            ws, errs = [], []
-            failed = None
-            for g in range(leaf.shape[0]):
-                w, info = compress_matrix(leaf[g], ccfg, jax.random.fold_in(k, g))
-                if w is None:
-                    failed = info
-                    break
-                ws.append(w)
-                errs.append(info)
-            if failed is not None:
-                skipped.append((path, failed))
-                out.append(leaf)
-                continue
-            w = jax.tree.map(lambda *xs: jnp.stack(xs), *ws)
-            nb = quantized.compressed_num_bytes(w)
-            ob = leaf.size * leaf.dtype.itemsize
-            compressed.append((path, ob, nb, float(np.mean(errs))))
-            out.append(w)
-        if verbose:
-            print(f"  compressed {path}: x{compressed[-1][1]/max(compressed[-1][2],1):.1f}, rel_err {compressed[-1][3]:.3f}")
-    report = CompressionReport(compressed, skipped)
-    return jax.tree_util.tree_unflatten(treedef, out), report
+    plan = comp.plan_compression(values, ccfg.to_policy())
+    new_values, artifact = comp.execute_plan(
+        plan, values, key=key, verbose=verbose
+    )
+    return new_values, artifact.report

@@ -1,12 +1,17 @@
-"""Compression launcher — the paper's technique as a deployable pipeline.
+"""Compression launcher — plan/execute pipeline over a whole model.
 
-Compresses a model's linear weights tile-by-tile (greedy / alternating /
-BBO back-ends, see core/compress.py), reports per-tensor ratios and
-residuals, and saves the compressed values as a checkpoint restorable by
-launch/serve.py.
+Plans the workload from a :class:`repro.compression.CompressionPolicy`
+(either ``--policy policy.json`` or a one-rule policy built from the flags),
+prints the plan, then executes it with tiles pooled across tensors into
+batched solves.  The compressed values are saved as a checkpoint together
+with the artifact manifest, which ``launch/serve.py`` consumes to restore
+and validate the compressed model.
 
     PYTHONPATH=src python -m repro.launch.compress --arch granite-moe-1b-a400m \
         --reduced --method bbo --rank-ratio 0.375
+
+    PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
+        --reduced --policy policy.json --plan-only
 """
 
 from __future__ import annotations
@@ -17,13 +22,31 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compression import (
+    CompressionPolicy,
+    execute_plan,
+    plan_compression,
+)
 from repro.configs import get_config, reduced_for_smoke
-from repro.configs.base import CompressionConfig
 from repro.checkpoint import checkpointer
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.compress import compress_params
 from repro.models import init_model
 from repro.models.params import split
+
+
+def build_policy(args) -> CompressionPolicy:
+    if args.policy:
+        with open(args.policy) as f:
+            return CompressionPolicy.from_json(f.read())
+    return CompressionPolicy(
+        method=args.method,
+        tile_n=args.tile_n,
+        tile_d=args.tile_d,
+        rank_ratio=args.rank_ratio,
+        min_size=args.min_size,
+        bbo_iters=args.bbo_iters,
+        solver_backend=args.backend,
+    )
 
 
 def main() -> None:
@@ -32,6 +55,10 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None, help="source checkpoint")
     ap.add_argument("--out-dir", default="/tmp/repro_compressed")
+    ap.add_argument("--policy", default=None,
+                    help="CompressionPolicy JSON file; overrides the flags below")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="print the plan (predicted bytes/ratio) and exit")
     ap.add_argument("--method", default="alternating",
                     choices=["greedy", "alternating", "bbo"])
     ap.add_argument("--tile-n", type=int, default=32)
@@ -39,6 +66,7 @@ def main() -> None:
     ap.add_argument("--rank-ratio", type=float, default=0.125)
     ap.add_argument("--min-size", type=int, default=1 << 16)
     ap.add_argument("--bbo-iters", type=int, default=64)
+    ap.add_argument("--backend", default="auto", choices=["auto", "pallas", "jnp"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -55,15 +83,19 @@ def main() -> None:
             values = state["params"]
             print(f"[restore] step {step}")
 
-    ccfg = CompressionConfig(
-        enabled=True, tile_n=args.tile_n, tile_d=args.tile_d,
-        rank_ratio=args.rank_ratio, min_size=args.min_size,
-        optimizer=args.method, bbo_iters=args.bbo_iters,
-    )
+    policy = build_policy(args)
+    plan = plan_compression(values, policy)
+    print(plan.summary())
+    if args.plan_only:
+        return
+
     t = time.time()
-    cvalues, report = compress_params(values, cfg, ccfg, verbose=True)
+    cvalues, artifact = execute_plan(
+        plan, values, key=jax.random.PRNGKey(args.seed), verbose=True
+    )
     dt = time.time() - t
-    print(f"\n[compress/{args.method}] {len(report.compressed)} tensors in {dt:.1f}s")
+    report = artifact.report
+    print(f"\n[compress/{policy.method}] {len(report.compressed)} tensors in {dt:.1f}s")
     for path, ob, nb, err in report.compressed:
         print(f"  {path:48s} {ob/2**20:8.2f} -> {nb/2**20:8.2f} MiB "
               f"(x{ob/max(nb,1):4.1f})  rel_err {err:.3f}")
@@ -72,7 +104,9 @@ def main() -> None:
     print(f"overall ratio on compressed tensors: x{report.total_ratio:.2f}")
 
     path = checkpointer.save(args.out_dir, 0, {"params": cvalues})
+    mpath = artifact.save(args.out_dir)
     print(f"saved compressed params to {path}")
+    print(f"saved compression manifest to {mpath}")
 
 
 if __name__ == "__main__":

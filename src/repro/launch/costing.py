@@ -40,7 +40,40 @@ from repro.serving.engine import cache_shardings, make_decode_step, make_prefill
 from repro.training.loop import _axes_trees, make_optimizer, make_train_step, state_shardings
 from repro.optim import constant
 
-__all__ = ["cost_cell", "CellCosts"]
+__all__ = [
+    "cost_cell",
+    "CellCosts",
+    "compressed_weight_bytes",
+    "dense_weight_bytes",
+]
+
+
+# ---------------------------------------------------------------------------
+# Weight-compression byte costing (pure; used by repro.compression.plan to
+# predict bytes/ratio before any solver runs)
+# ---------------------------------------------------------------------------
+
+
+def dense_weight_bytes(shape, itemsize: int) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * int(itemsize)
+
+
+def compressed_weight_bytes(
+    d_in: int, d_out: int, tile_n: int, tile_d: int, K: int,
+    itemsize: int, groups: int = 1,
+) -> int:
+    """Stored bytes of the {"m_packed", "C"} form produced by
+    ``repro.compression.execute`` — must agree exactly with
+    ``quantized.compressed_num_bytes`` on the executed result:
+    per tile, M packs to tile_n * ceil(K/8) uint8 and C stays
+    (K, tile_d) at the weight's dtype."""
+    r, c = d_in // tile_n, d_out // tile_d
+    m_bytes = r * c * tile_n * ((K + 7) // 8)
+    c_bytes = r * c * K * tile_d * int(itemsize)
+    return int(groups) * (m_bytes + c_bytes)
 
 
 class CellCosts(NamedTuple):

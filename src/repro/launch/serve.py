@@ -1,6 +1,12 @@
 """Serving launcher: batched generation, optionally from a checkpoint and
 optionally with integer-decomposition-compressed weights.
 
+When ``--ckpt-dir`` holds a compression manifest (written by
+``launch/compress.py``), the compressed checkpoint is restored through the
+manifest's template — the manifest, not shape-sniffing, decides which
+weights are ``{"m_packed", "C"}`` dicts and with what geometry — and the
+engine validates the restored tree against it.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduced \
         --compress --steps 32 --batch 4
 """
@@ -13,10 +19,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compression import CompressionArtifact, CompressionPolicy
+from repro.compression import execute_plan, plan_compression
 from repro.configs import get_config, reduced_for_smoke
-from repro.configs.base import CompressionConfig
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.compress import compress_params
 from repro.models import init_model
 from repro.models.params import split
 from repro.serving.engine import Engine
@@ -44,29 +50,58 @@ def main() -> None:
     if args.reduced:
         cfg = reduced_for_smoke(cfg)
     values, _ = split(init_model(jax.random.PRNGKey(args.seed), cfg))
+
+    artifact = None
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)
-        step, state = mgr.restore_latest({"step": jnp.zeros((), jnp.int32),
-                                          "params": values,
-                                          "opt": None})
-        if state is not None:
-            values = state["params"]
-            print(f"[restore] step {step}")
+        if CompressionArtifact.exists(args.ckpt_dir):
+            # Manifest-driven restore: the checkpoint's tree is compressed
+            # (and holds params only, as written by launch/compress.py), so
+            # the dense template must be rewritten before restore.
+            artifact = CompressionArtifact.load(args.ckpt_dir)
+            template = artifact.restore_template(values)
+            step, state = mgr.restore_latest({"params": template})
+            if state is not None:
+                values = state["params"]
+                t = artifact.manifest["totals"]
+                print(f"[restore] step {step} (compressed: "
+                      f"{len(artifact.manifest['tensors'])} tensors, "
+                      f"x{t['ratio']:.2f})")
+            else:
+                # manifest without a restorable step: serve the dense init
+                # rather than crashing manifest validation against it
+                print(f"[restore] {args.ckpt_dir}: manifest present but no "
+                      "checkpoint step; serving dense init")
+                artifact = None
+        else:
+            step, state = mgr.restore_latest(
+                {"step": jnp.zeros((), jnp.int32), "params": values,
+                 "opt": None}
+            )
+            if state is not None:
+                values = state["params"]
+                print(f"[restore] step {step}")
 
-    if args.compress:
-        ccfg = CompressionConfig(
-            enabled=True, tile_n=args.tile_n, tile_d=args.tile_d,
-            rank_ratio=args.rank_ratio, min_size=4096,
-            optimizer=args.compress_method,
+    if args.compress and artifact is None:
+        policy = CompressionPolicy(
+            method=args.compress_method, tile_n=args.tile_n,
+            tile_d=args.tile_d, rank_ratio=args.rank_ratio, min_size=4096,
         )
+        plan = plan_compression(values, policy)
         t = time.time()
-        values, report = compress_params(values, cfg, ccfg, verbose=True)
+        values, artifact = execute_plan(
+            plan, values, key=jax.random.PRNGKey(args.seed), verbose=True
+        )
+        report = artifact.report
         print(f"[compress] {len(report.compressed)} tensors, "
               f"ratio {report.total_ratio:.2f}x, {time.time()-t:.1f}s; "
               f"skipped {len(report.skipped)}")
 
     eng = Engine(cfg, values, max_len=args.prompt_len + args.steps,
-                 batch=args.batch, temperature=args.temperature)
+                 batch=args.batch, temperature=args.temperature,
+                 artifact=artifact)
+    if eng.compression is not None:
+        print(f"[engine] serving compressed weights: {eng.compression}")
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )

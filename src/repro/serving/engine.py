@@ -103,7 +103,16 @@ def make_decode_step(cfg: ModelConfig, unroll_groups: bool = False):
 
 @dataclasses.dataclass
 class Engine:
-    """Single-host batched serving driver (examples / integration tests)."""
+    """Single-host batched serving driver (examples / integration tests).
+
+    ``artifact`` is an optional compression manifest — a
+    ``repro.compression.CompressionArtifact`` or its raw manifest dict, as
+    written next to a checkpoint by ``launch/compress.py``.  When given, the
+    params tree is validated against it at construction (every manifested
+    tensor present and with the manifested {m_packed, C} shapes) and
+    ``self.compression`` summarises what is being served; the manifest, not
+    shape-sniffing, is the statement of which weights are compressed.
+    """
 
     cfg: ModelConfig
     params: dict
@@ -111,8 +120,32 @@ class Engine:
     batch: int
     temperature: float = 0.0
     eos_id: int = 1
+    artifact: object = None
 
     def __post_init__(self):
+        self.compression = None
+        if self.artifact is not None:
+            from repro.compression.artifact import CompressionArtifact
+
+            art = (
+                self.artifact
+                if isinstance(self.artifact, CompressionArtifact)
+                else CompressionArtifact(self.artifact)
+            )
+            problems = art.validate_params(self.params)
+            if problems:
+                raise ValueError(
+                    "params tree does not match the compression manifest:\n  "
+                    + "\n  ".join(problems)
+                )
+            tensors = art.manifest["tensors"]
+            methods = sorted({e["method"] for e in tensors.values()})
+            self.artifact = art
+            self.compression = {
+                "tensors": len(tensors),
+                "ratio": round(art.total_ratio, 3),
+                "methods": methods,
+            }
         self.prefill = jax.jit(make_prefill(self.cfg))
         self.decode = jax.jit(make_decode_step(self.cfg))
 

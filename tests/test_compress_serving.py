@@ -119,3 +119,48 @@ def test_engine_generate_and_compressed_engine(key):
     ceng = Engine(cfg, cvals, max_len=24, batch=2)
     cout = ceng.generate(prompts, steps=8)
     assert cout.shape == (2, 16)
+
+
+def test_plan_execute_save_serve_restore_roundtrip(key, tmp_path):
+    """The full artifact lifecycle: plan -> execute -> checkpoint + manifest
+    -> manifest-driven restore -> engine validation -> identical serving."""
+    from repro import compression as comp
+    from repro.checkpoint import checkpointer
+
+    cfg = reduced_for_smoke(get_config("qwen3-32b"))
+    vals, _ = split(init_model(key, cfg))
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+        rules=(comp.CompressionRule(pattern=r"head", method="greedy"),),
+    )
+    plan = comp.plan_compression(vals, policy)
+    assert len(plan.tensors) > 0
+    cvals, artifact = comp.execute_plan(plan, vals, key=key)
+
+    d = str(tmp_path)
+    checkpointer.save(d, 0, {"params": cvals})
+    artifact.save(d)
+
+    # a fresh process would only have the dense template + the manifest
+    art2 = comp.CompressionArtifact.load(d)
+    template = {"params": art2.restore_template(vals)}
+    restored = checkpointer.restore(d, 0, template)["params"]
+    assert art2.validate_params(restored) == []
+
+    a = dict(comp.plan_compression(vals, policy).pools())  # plan is stable
+    assert a.keys() == plan.pools().keys()
+
+    prompts = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    eng = Engine(cfg, cvals, max_len=24, batch=2, artifact=artifact)
+    reng = Engine(cfg, restored, max_len=24, batch=2, artifact=art2)
+    assert eng.compression == reng.compression
+    assert eng.compression["tensors"] == len(art2.manifest["tensors"])
+    np.testing.assert_array_equal(
+        np.asarray(eng.generate(prompts, steps=8)),
+        np.asarray(reng.generate(prompts, steps=8)),
+    )
+
+    # the engine refuses a params/manifest mismatch instead of serving it
+    with pytest.raises(ValueError, match="manifest"):
+        Engine(cfg, vals, max_len=24, batch=2, artifact=art2)

@@ -76,24 +76,32 @@ def test_incremental_stats_match_batch():
 
 
 def test_nbocs_recovers_known_quadratic():
-    """Sampling posterior mean should approach the generating coefficients."""
+    """Sampling posterior mean should approach the generating coefficients.
+
+    ``sample_nbocs`` standardises the targets internally (subtracts the
+    mean, divides by the std): the division is a global rescale that
+    preserves direction, but the mean shift is absorbed entirely by the
+    *constant* feature's coefficient, which is therefore not recoverable.
+    Compare directions over the non-constant coefficients only — with an
+    800-point budget the cosine is deterministic at > 0.99 on CPU."""
     n = 5
+    npts = 800
     p = features.num_features(n)
     alpha_true = jax.random.normal(jax.random.PRNGKey(7), (p,))
-    X = jax.random.rademacher(jax.random.PRNGKey(8), (400, n), dtype=jnp.float32)
+    X = jax.random.rademacher(jax.random.PRNGKey(8), (npts, n), dtype=jnp.float32)
     Phi = jax.vmap(features.featurize)(X)
     y = Phi @ alpha_true
     stats = surrogate.init_stats(n)
-    for i in range(400):
+    for i in range(npts):
         stats = surrogate.update_stats(stats, X[i], y[i])
     draws = jnp.stack([
         surrogate.sample_nbocs(jax.random.PRNGKey(i), stats, sigma2=10.0)
-        for i in range(8)
+        for i in range(16)
     ])
-    mean = jnp.mean(draws, axis=0)
-    # y was standardised inside; compare directions
-    cos = float(mean @ alpha_true / (jnp.linalg.norm(mean) * jnp.linalg.norm(alpha_true)))
-    assert cos > 0.98
+    mean = jnp.mean(draws, axis=0)[1:]        # drop the constant feature
+    at = alpha_true[1:]
+    cos = float(mean @ at / (jnp.linalg.norm(mean) * jnp.linalg.norm(at)))
+    assert cos > 0.98, cos
 
 
 def test_fm_surrogate_learns():
@@ -124,16 +132,22 @@ def test_bbo_finds_exact_solution_small_instance():
 
 @pytest.mark.slow
 def test_bbo_nbocs_beats_random_search():
+    """At an 80-iteration budget the comparison is a coin flip on this tiny
+    instance (both methods hover near the optimum); at 160 iterations x 8
+    seeded runs every nBOCS run reaches the optimum (67.6866) while RS's
+    mean stays ~1.3 above it — deterministic on CPU with these keys."""
     W = jax.random.normal(jax.random.PRNGKey(4), (5, 30))
     f = dec.make_objective(W, 2)
-    base = dict(n=10, N=5, K=2, iters=80, init_points=10)
+    base = dict(n=10, N=5, K=2, iters=160, init_points=10)
     nb = bbo_lib.run_bbo_batch(
-        jax.random.PRNGKey(1), bbo_lib.BBOConfig(algo="nbocs", **base), f, 4
+        jax.random.PRNGKey(1), bbo_lib.BBOConfig(algo="nbocs", **base), f, 8
     )
     rs = bbo_lib.run_bbo_batch(
-        jax.random.PRNGKey(1), bbo_lib.BBOConfig(algo="rs", **base), f, 4
+        jax.random.PRNGKey(1), bbo_lib.BBOConfig(algo="rs", **base), f, 8
     )
-    assert float(jnp.mean(nb.best_y)) <= float(jnp.mean(rs.best_y)) + 1e-6
+    assert float(jnp.mean(nb.best_y)) <= float(jnp.mean(rs.best_y)) + 1e-6, (
+        float(jnp.mean(nb.best_y)), float(jnp.mean(rs.best_y)),
+    )
 
 
 def test_augmentation_appends_orbit_with_equal_costs():
