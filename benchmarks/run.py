@@ -55,11 +55,13 @@ def summarize_roofline() -> None:
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import compress_scale, kernel_bench, paper_experiments
+    from benchmarks import compress_scale, kernel_bench, paper_experiments, serve_bench
+    from benchmarks.common import SCALE
 
     paper_experiments.run_all()
     kernel_bench.run_all()
     compress_scale.run_all()
+    serve_bench.bench_serve_suite(fast=SCALE == "quick")
     summarize_dryrun()
     summarize_roofline()
 

@@ -1,0 +1,164 @@
+"""Serving decode benchmark: dense vs unpack-einsum vs fused bitlinear.
+
+For each (reduced config x batch) cell, measure decode throughput of the
+three compressed-layer serving paths through the real ``Engine``:
+
+  dense   uncompressed weights (the baseline the paper wants to beat),
+  einsum  compressed weights through ``apply_compressed_einsum`` — unpacks
+          M to dense +-1 and runs two einsums on EVERY decode step,
+  fused   compressed weights through the fused Pallas ``bitlinear`` kernel
+          (y = (x @ M) @ C in one kernel, packed M read directly).
+
+Each row also records the per-step weight bytes each path reads for the
+compressed-eligible tensors — the quantity a memory-bound decode is
+limited by (DESIGN.md §4; ratio K/(16*td) + K/tn vs bf16 dense).  On this
+CPU container the kernels run in Pallas *interpret* mode, so fused
+wall-clock is NOT representative of TPU — the json records the mode; the
+dense/einsum times and all byte counts are real.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+
+Writes BENCH_serve.json at the repo root (CI keeps it fresh in fast mode).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.compression import CompressionPolicy, execute_plan, plan_compression
+from repro.kernels import ops
+from repro.configs import get_config, reduced_for_smoke
+from repro.models import init_cache, init_model
+from repro.models.params import split
+from repro.serving.engine import Engine
+
+ARCHS = ("qwen3-32b", "mistral-nemo-12b", "granite-moe-1b-a400m")
+BATCHES = (1, 4, 16)
+PROMPT_LEN = 8
+
+
+def _byte_counts(artifact) -> dict:
+    """Per-decode-step weight bytes read for the manifested tensors.
+
+    einsum additionally materialises the unpacked dense ±1 M each step
+    (groups * r*c*tn*K elements at the activation dtype) — intermediate
+    HBM traffic the fused kernel is built to avoid."""
+    tensors = artifact.manifest["tensors"].values()
+    dense = sum(e["orig_bytes"] for e in tensors)
+    compressed = sum(e["new_bytes"] for e in artifact.manifest["tensors"].values())
+    unpacked_m = 0
+    for e in artifact.manifest["tensors"].values():
+        r, c = e["shape"][-2] // e["tile_n"], e["shape"][-1] // e["tile_d"]
+        itemsize = jnp.dtype(e["dtype"]).itemsize
+        unpacked_m += e["groups"] * r * c * e["tile_n"] * e["K"] * itemsize
+    return {
+        "dense_weight_bytes": int(dense),
+        "compressed_weight_bytes": int(compressed),
+        "einsum_unpacked_m_bytes": int(unpacked_m),
+        "bytes_ratio": dense / max(compressed, 1),
+    }
+
+
+def _decode_toks_per_s(eng: Engine, cfg, batch: int, steps: int) -> float:
+    """Prefill once, then time ``steps`` jitted decode calls."""
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, PROMPT_LEN), 0, cfg.vocab_size
+    )
+    cache = init_cache(cfg, batch, PROMPT_LEN + steps + 2)
+    last, cache = eng.prefill(eng.params, {"tokens": prompts}, cache)
+    cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    # warm-up: compile the decode step outside the timed region
+    logits, _ = eng.decode(eng.params, cur, cache, PROMPT_LEN)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for t in range(steps):
+        logits, cache = eng.decode(eng.params, cur, cache, PROMPT_LEN + t)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return batch * steps / dt
+
+
+def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:
+    steps = 8 if fast else 24
+    results = []
+    for arch in ARCHS:
+        cfg = reduced_for_smoke(get_config(arch))
+        values, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+        policy = CompressionPolicy(
+            method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+            min_size=4096,
+        )
+        plan = plan_compression(values, policy)
+        cvals, artifact = execute_plan(plan, values, key=jax.random.PRNGKey(0))
+        bytes_row = _byte_counts(artifact)
+        for batch in BATCHES:
+            row = {
+                "arch": arch, "batch": batch, "decode_steps": steps,
+                "tensors_compressed": len(artifact.manifest["tensors"]),
+                **bytes_row,
+            }
+            max_len = PROMPT_LEN + steps + 2
+            # hooks bind at trace time: build each engine right before its
+            # measurement, and fully clear kernel hooks (flash included —
+            # Engine's escape hatch only clears bitlinear) for the
+            # non-fused rows so a prior fused engine can't leak into them
+            modes = (
+                ("dense", values, None, False),
+                ("einsum", cvals, artifact, False),
+                ("fused", cvals, artifact, True),
+            )
+            for name, params, art, fused in modes:
+                if not fused:
+                    ops.disable_kernels()
+                eng = Engine(cfg, params, max_len=max_len, batch=batch,
+                             artifact=art, use_fused_bitlinear=fused)
+                tps = _decode_toks_per_s(eng, cfg, batch, steps)
+                row[f"{name}_toks_per_s"] = tps
+                emit(f"serve_{arch}_b{batch}_{name}",
+                     1e6 * batch / tps, f"toks_per_s={tps:.1f}")
+            results.append(row)
+
+    out = {
+        "suite": "serve",
+        "device": jax.default_backend(),
+        "pallas_mode": (
+            "interpret" if jax.default_backend() != "tpu" else "compiled"
+        ),
+        "configs": "reduced_for_smoke",
+        "note": (
+            "fused wall-clock on CPU runs the kernel in Pallas interpret "
+            "mode (not representative of TPU); byte counts are exact"
+        ),
+        "results": results,
+    }
+    if out_path is None:
+        out_path = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+        )
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI mode: fewer decode steps")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    out = bench_serve_suite(fast=args.fast, out_path=args.out)
+    print(f"wrote BENCH_serve.json ({len(out['results'])} rows, "
+          f"pallas_mode={out['pallas_mode']})")
+
+
+if __name__ == "__main__":
+    main()

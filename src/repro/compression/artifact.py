@@ -108,11 +108,64 @@ class CompressionArtifact:
     def exists(cls, directory: str) -> bool:
         return os.path.exists(os.path.join(directory, MANIFEST_NAME))
 
+    @classmethod
+    def from_plan(cls, plan) -> "CompressionArtifact":
+        """Predicted artifact for a :class:`CompressionPlan` that has NOT
+        been executed: geometry and byte counts come from the plan
+        (``rel_err`` is None — no solver ran).  Enough for shape-level
+        consumers — ``restore_template``/``validate_params`` and the
+        dry-run cells that lower compressed serving programs — but not a
+        statement about any actual checkpoint."""
+        tensors = {}
+        for t in plan.tensors:
+            r, c = t.d_in // t.tile_n, t.d_out // t.tile_d
+            kb = (t.K + 7) // 8
+            lead = [t.groups] if len(t.shape) == 3 else []
+            tensors[t.path] = {
+                "shape": list(t.shape),
+                "dtype": t.dtype,
+                "groups": t.groups,
+                "tile_n": t.tile_n,
+                "tile_d": t.tile_d,
+                "K": t.K,
+                "method": t.method,
+                "rule": t.rule,
+                "num_tiles": t.num_tiles,
+                "orig_bytes": t.orig_bytes,
+                "new_bytes": t.pred_bytes,
+                "rel_err": None,
+                "m_packed": {
+                    "shape": lead + [r, c, t.tile_n, kb],
+                    "dtype": "uint8",
+                },
+                "C": {"shape": lead + [r, c, t.K, t.tile_d], "dtype": t.dtype},
+            }
+        manifest = {
+            "format": MANIFEST_FORMAT,
+            "policy": plan.policy.to_dict(),
+            "solver_backend": plan.policy.solver_backend,
+            "predicted_only": True,
+            "tensors": tensors,
+            "skipped": {p: r for p, r in plan.skipped},
+            "pools": [],
+            "totals": {
+                "orig_bytes": int(plan.total_orig_bytes),
+                "new_bytes": int(plan.total_pred_bytes),
+                "ratio": plan.pred_ratio,
+            },
+        }
+        return cls(manifest)
+
     # -- serving consumption ------------------------------------------------
-    def restore_template(self, dense_values):
+    def restore_template(self, dense_values, leaf_fn=None):
         """Rewrite a dense values tree into the compressed checkpoint's
         structure: each manifest tensor leaf becomes
-        ``{"m_packed": ShapeDtypeStruct, "C": ShapeDtypeStruct}``."""
+        ``{"m_packed": ShapeDtypeStruct, "C": ShapeDtypeStruct}``.
+
+        ``leaf_fn(entry, leaf)``, when given, supplies the replacement for a
+        manifested leaf instead (and skips the shape check — used to rewrite
+        parallel trees such as shardings whose leaves carry no shape).
+        Dense leaves may be arrays or ShapeDtypeStructs."""
         entries = self.manifest["tensors"]
 
         def rewrite(tree, prefix):
@@ -130,10 +183,13 @@ class CompressionArtifact:
             e = entries.get(prefix)
             if e is None:
                 return tree
-            if tuple(e["shape"]) != tuple(np.shape(tree)):
+            if leaf_fn is not None:
+                return leaf_fn(e, tree)
+            shape = tuple(getattr(tree, "shape", np.shape(tree)))
+            if tuple(e["shape"]) != shape:
                 raise ValueError(
                     f"manifest/template shape mismatch at {prefix!r}: "
-                    f"{tuple(e['shape'])} vs {tuple(np.shape(tree))}"
+                    f"{tuple(e['shape'])} vs {shape}"
                 )
             return {
                 "m_packed": jax.ShapeDtypeStruct(

@@ -24,24 +24,76 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "is_compressed",
     "apply_compressed",
+    "apply_compressed_einsum",
     "decompress",
     "compressed_num_bytes",
     "dense_num_bytes",
+    "register_bitlinear",
+    "register_bitlinear_fused",
+    "clear_bitlinear",
+    "has_fused_bitlinear",
 ]
 
 _KEYS = frozenset({"m_packed", "C"})
 
-# Set by repro.kernels.ops at import time when a Pallas path is available.
+# Kernel hooks:
+#   _BITLINEAR_IMPL       partial hook, z = x @ M per tile (keeps the
+#                         two-einsum layer structure — autodiff-friendly).
+#                         Extension point only: NOTHING in-tree registers
+#                         it (a TPU z-only kernel would), so
+#                         apply_compressed_einsum stays a fixed oracle in
+#                         every current configuration.
+#   _BITLINEAR_FUSED_IMPL whole-layer hook, y = (x @ M) @ C in one kernel —
+#                         the serving hot path (no per-step unpack of M),
+#                         registered by repro.kernels.ops.enable_kernels().
+# Both are process-global: a registered fused impl reroutes every
+# compressed layer in every model traced afterwards.
 _BITLINEAR_IMPL = None
+_BITLINEAR_FUSED_IMPL = None
+
+
+def _check_impl(fn, name: str):
+    if fn is None:
+        raise ValueError(
+            f"{name}(None) would silently disable a previously registered "
+            "kernel impl; call clear_bitlinear() to unregister explicitly"
+        )
+    if not callable(fn):
+        raise TypeError(f"{name} expects a callable, got {type(fn)!r}")
 
 
 def register_bitlinear(fn) -> None:
+    """Register the partial hook ``fn(xt, m_packed, K) -> z`` computing
+    z = x @ M per tile (the two-einsum path keeps autodiff structure)."""
+    _check_impl(fn, "register_bitlinear")
     global _BITLINEAR_IMPL
     _BITLINEAR_IMPL = fn
+
+
+def register_bitlinear_fused(fn) -> None:
+    """Register the fused inference hook ``fn(x, w) -> y`` computing the
+    whole compressed layer y = (x @ M) @ C in one kernel.  Gradients stay
+    exact: ``apply_compressed`` routes the primal through ``fn`` but
+    derives cotangents from the einsum formulation (custom_vjp below)."""
+    _check_impl(fn, "register_bitlinear_fused")
+    global _BITLINEAR_FUSED_IMPL
+    _BITLINEAR_FUSED_IMPL = fn
+
+
+def clear_bitlinear() -> None:
+    """Unregister both bitlinear hooks (back to the pure-jnp fallbacks)."""
+    global _BITLINEAR_IMPL, _BITLINEAR_FUSED_IMPL
+    _BITLINEAR_IMPL = None
+    _BITLINEAR_FUSED_IMPL = None
+
+
+def has_fused_bitlinear() -> bool:
+    return _BITLINEAR_FUSED_IMPL is not None
 
 
 def is_compressed(w) -> bool:
@@ -66,8 +118,10 @@ def decompress(w: dict, dtype=None) -> jax.Array:
     return tiles.transpose(0, 2, 1, 3).reshape(r * tn, c * td)
 
 
-def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
-    """y = x @ W_hat without materialising W_hat."""
+def apply_compressed_einsum(x: jax.Array, w: dict) -> jax.Array:
+    """y = x @ W_hat via the two-einsum form (unpack M, then z = x @ M,
+    y = z @ C).  The autodiff-friendly oracle path; ``apply_compressed``
+    below dispatches to the fused kernel when one is registered."""
     C = w["C"]
     r, c, K, td = C.shape
     tn = w["m_packed"].shape[2]
@@ -80,6 +134,52 @@ def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
         z = jnp.einsum("...rn,rcnk->...rck", xt, M)
     y = jnp.einsum("...rck,rckd->...cd", z, C.astype(x.dtype))
     return y.reshape(*lead, c * td)
+
+
+@jax.custom_vjp
+def _apply_fused(x: jax.Array, w: dict) -> jax.Array:
+    return _BITLINEAR_FUSED_IMPL(x, w)
+
+
+def _apply_fused_fwd(x, w):
+    return _apply_fused(x, w), (x, w)
+
+
+def _apply_fused_bwd(res, g):
+    # Cotangents from the einsum formulation (the fused kernel is
+    # inference-only; M is recomputed from the packed bits — cheap vs
+    # saving z).  m_packed is integer-valued -> float0 cotangent.
+    x, w = res
+    C = w["C"]
+    r, c, K, td = C.shape
+    tn = w["m_packed"].shape[2]
+    lead = x.shape[:-1]
+    M = _unpack(w["m_packed"], K, x.dtype)                  # (r, c, tn, K)
+    gt = g.reshape(*lead, c, td)
+    dz = jnp.einsum("...cd,rckd->...rck", gt, C.astype(x.dtype))
+    dx = jnp.einsum("...rck,rcnk->...rn", dz, M).reshape(x.shape)
+    xt = x.reshape(*lead, r, tn)
+    z = jnp.einsum("...rn,rcnk->...rck", xt, M)
+    dC = jnp.einsum("...rck,...cd->rckd", z, gt).astype(C.dtype)
+    dmp = np.zeros(w["m_packed"].shape, dtype=jax.dtypes.float0)
+    return dx, {"m_packed": dmp, "C": dC}
+
+
+_apply_fused.defvjp(_apply_fused_fwd, _apply_fused_bwd)
+
+
+def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
+    """y = x @ W_hat without materialising W_hat.
+
+    With a fused kernel registered (``register_bitlinear_fused``, wired by
+    ``repro.kernels.ops.enable_kernels``) the whole layer runs as one
+    y = (x @ M) @ C kernel call — no per-step unpack of M to dense ±1 —
+    and gradients are still exact via the einsum-derived custom VJP.
+    Dispatch is read at trace time: already-jitted callables keep the
+    impl they were traced with."""
+    if _BITLINEAR_FUSED_IMPL is not None:
+        return _apply_fused(x, w)
+    return apply_compressed_einsum(x, w)
 
 
 def compressed_num_bytes(w: dict) -> int:

@@ -10,10 +10,20 @@ TPU adaptation (DESIGN.md §4): the win is HBM bandwidth — M's bytes-read are
 VMEM, unpacks to +-1 in VREGs, feeds the MXU, and fuses the K-dim
 intermediate z = x @ M so it never touches HBM.
 
-Grid (T/bt, c, r) with r as the reduction ("arbitrary") dimension:
-accumulate the (bt, td) output block in a f32 VMEM scratch across r-steps.
-MXU alignment: bt and td should be multiples of 128 on real hardware
-(asserted softly); K and tn are tile-level and may be small.
+Two schedules behind one entry point:
+
+  * grid (T/bt, c, r) with r as the reduction ("arbitrary") dimension —
+    the prefill/training-shapes path; the (bt, td) output block accumulates
+    in f32 VMEM scratch across r-steps.  T is padded up to a block multiple
+    and sliced back, so any T (including prime decode batches) works.
+  * decode fast path, grid (c,): when the whole activation row block plus
+    one output-column's worth of M and C fit in VMEM (the decode regime —
+    T = batch, e.g. 1..16), the r-reduction runs inside a single kernel
+    invocation with C resident in VMEM, so every M/C byte is read from HBM
+    exactly once per step and z never leaves registers.
+
+MXU alignment: bt and td should be multiples of 128 on real hardware;
+K and tn are tile-level and may be small.
 """
 
 from __future__ import annotations
@@ -29,6 +39,21 @@ from repro.kernels import _compat
 
 __all__ = ["bitlinear"]
 
+# VMEM budget for the decode fast path (x block + all M/C tiles of one
+# output column + f32 accumulator); ~16 MB/core physical, stay well under.
+_DECODE_VMEM_BYTES = 4 * 2**20
+# Bound on the python-unrolled r-reduction of the decode kernel (compile
+# size control; past this the grid path's scratch accumulator wins anyway).
+_DECODE_MAX_R = 256
+
+
+def _unpack_bits(mp, K: int, dtype):
+    """uint8 (tn, kb) -> {-1,+1} (tn, K) in VREGs."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, 1, 8), 2)
+    bits = (mp[:, :, None] >> shifts) & jnp.uint8(1)
+    m = bits.reshape(mp.shape[0], mp.shape[1] * 8)[:, :K]
+    return 2.0 * m.astype(dtype) - 1.0
+
 
 def _kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
     r = pl.program_id(2)
@@ -41,12 +66,7 @@ def _kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
     mp = mp_ref[0, 0]                    # (tn, kb) uint8
     c = c_ref[0, 0]                      # (K, td)
 
-    # unpack bits -> {-1, +1} in x.dtype
-    shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, 1, 8), 2)
-    bits = (mp[:, :, None] >> shifts) & jnp.uint8(1)
-    m = bits.reshape(mp.shape[0], mp.shape[1] * 8)[:, :K]
-    m = (2.0 * m.astype(x.dtype) - 1.0)
-
+    m = _unpack_bits(mp, K, x.dtype)
     z = jnp.dot(x, m, preferred_element_type=jnp.float32)          # (bt, K)
     acc_ref[...] += jnp.dot(
         z.astype(c.dtype), c, preferred_element_type=jnp.float32
@@ -57,23 +77,82 @@ def _kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _decode_kernel(x_ref, mp_ref, c_ref, o_ref, *, K: int, n_r: int, tn: int):
+    x = x_ref[...]                       # (Tp, d_in)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for r in range(n_r):                 # static unroll: z stays in VREGs
+        m = _unpack_bits(mp_ref[r, 0], K, x.dtype)
+        z = jnp.dot(
+            x[:, r * tn:(r + 1) * tn], m, preferred_element_type=jnp.float32
+        )
+        c = c_ref[r, 0]                  # (K, td), VMEM-resident
+        acc = acc + jnp.dot(z.astype(c.dtype), c,
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _decode_path_ok(Tp, d_in, n_r, tn, kb, K, td, x_itemsize, c_itemsize):
+    vmem = (
+        Tp * d_in * x_itemsize                 # activation block
+        + n_r * tn * kb                        # packed M column
+        + n_r * K * td * c_itemsize            # C column
+        + 2 * Tp * td * 4                      # f32 accumulator + out block
+    )
+    return n_r <= _DECODE_MAX_R and vmem <= _DECODE_VMEM_BYTES
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret", "mode"))
 def bitlinear(
     x: jax.Array,        # (T, d_in)
     m_packed: jax.Array, # (r, c, tn, kb) uint8
     C: jax.Array,        # (r, c, K, td)
     block_t: int = 128,
     interpret: bool = False,
+    mode: str = "auto",  # auto | grid | decode
 ) -> jax.Array:
-    """y (T, d_out) = x @ decompress(m_packed, C)."""
+    """y (T, d_out) = x @ decompress(m_packed, C).  Any T: rows are
+    zero-padded to a block multiple and sliced back.  ``mode`` pins the
+    schedule ("grid" streams (T/bt, c, r); "decode" keeps C in VMEM with
+    the r-reduction inside one invocation); "auto" picks decode for small
+    T when the column working set fits VMEM."""
     T, d_in = x.shape
     n_r, n_c, tn, kb = m_packed.shape
     _, _, K, td = C.shape
     assert n_r * tn == d_in, (m_packed.shape, x.shape)
-    bt = min(block_t, T)
-    assert T % bt == 0, (T, bt)
+    assert mode in ("auto", "grid", "decode"), mode
 
-    grid = (T // bt, n_c, n_r)
+    # pad T up to a sublane-aligned block multiple (decode has T = batch,
+    # e.g. 3 — previously a hard assert)
+    bt = min(block_t, -(-T // 8) * 8)
+    Tp = -(-T // bt) * bt
+    if Tp != T:
+        x = jnp.pad(x, ((0, Tp - T), (0, 0)))
+
+    use_decode = mode == "decode" or (
+        mode == "auto"
+        and Tp <= bt
+        and _decode_path_ok(Tp, d_in, n_r, tn, kb, K, td,
+                            x.dtype.itemsize, C.dtype.itemsize)
+    )
+    if use_decode:
+        out = pl.pallas_call(
+            functools.partial(_decode_kernel, K=K, n_r=n_r, tn=tn),
+            grid=(n_c,),
+            in_specs=[
+                pl.BlockSpec((Tp, d_in), lambda c: (0, 0)),
+                pl.BlockSpec((n_r, 1, tn, kb), lambda c: (0, c, 0, 0)),
+                pl.BlockSpec((n_r, 1, K, td), lambda c: (0, c, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((Tp, td), lambda c: (0, c)),
+            out_shape=jax.ShapeDtypeStruct((Tp, n_c * td), x.dtype),
+            compiler_params=_compat.CompilerParams(
+                dimension_semantics=("parallel",),
+            ),
+            interpret=interpret,
+        )(x, m_packed, C)
+        return out[:T]
+
+    grid = (Tp // bt, n_c, n_r)
     out = pl.pallas_call(
         functools.partial(_kernel, K=K, n_r=n_r),
         grid=grid,
@@ -83,11 +162,11 @@ def bitlinear(
             pl.BlockSpec((1, 1, K, td), lambda t, c, r: (r, c, 0, 0)),
         ],
         out_specs=pl.BlockSpec((bt, td), lambda t, c, r: (t, c)),
-        out_shape=jax.ShapeDtypeStruct((T, n_c * td), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Tp, n_c * td), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, td), jnp.float32)],
         compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(x, m_packed, C)
-    return out
+    return out[:T]

@@ -9,7 +9,6 @@ Pallas interpret mode (kernel body as jnp on CPU) — used by the test suite.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import quantized
 from repro.kernels.bitlinear import bitlinear as _bitlinear
@@ -29,6 +28,8 @@ __all__ = [
     "sq_sweep_many",
     "sqa_sweep_many",
     "enable_kernels",
+    "disable_kernels",
+    "apply_compressed_fused",
 ]
 
 
@@ -36,10 +37,12 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def bitlinear(x, m_packed, C, block_t: int = 128, interpret: bool | None = None):
+def bitlinear(x, m_packed, C, block_t: int = 128, interpret: bool | None = None,
+              mode: str = "auto"):
     if interpret is None:
         interpret = default_interpret()
-    return _bitlinear(x, m_packed, C, block_t=block_t, interpret=interpret)
+    return _bitlinear(x, m_packed, C, block_t=block_t, interpret=interpret,
+                      mode=mode)
 
 
 def flash_attention(q, k, v, window: int = 0, interpret: bool | None = None, **kw):
@@ -81,8 +84,13 @@ def sqa_sweep_many(h, B, X0, rand, jperps, temperature: float = 0.05,
 def enable_kernels(interpret: bool | None = None) -> None:
     """Route model hot paths through the Pallas kernels.
 
-    On TPU this is called by the launchers; tests call it with
+    On TPU this is called by the launchers (and by ``serving.engine.Engine``
+    when a compression artifact is present); tests call it with
     interpret=True to exercise the kernels end-to-end inside the models.
+    Registers the flash-attention adapter into the attention layer and the
+    fused y = (x @ M) @ C bitlinear adapter into the compressed-layer hot
+    path.  Hooks are process-global; ``disable_kernels()`` restores the
+    pure-jnp fallbacks.
     """
     it = default_interpret() if interpret is None else interpret
 
@@ -95,29 +103,26 @@ def enable_kernels(interpret: bool | None = None) -> None:
         o = _flash(q, kk, vv, window=window, interpret=it)
         return o.transpose(0, 2, 1, 3).reshape(B, S, KV, rep, hd)
 
-    def _bitlinear_adapter(xt, m_packed, K):
-        # quantized layout: xt (..., r, tn) -> z (..., r, c, K)
-        n_r, n_c, tn, kb = m_packed.shape
-        lead = xt.shape[:-2]
-        T = 1
-        for d in lead:
-            T *= d
-        x2 = xt.reshape(T, n_r * tn)
-        # kernel computes the fused (x@M)@C; here we only need x@M per tile,
-        # so use an identity C of shape (r, c, K, K)? Cheaper: dedicated
-        # einsum path — fall back to unpack+einsum for the z-only form.
-        M = quantized._unpack(m_packed, K, xt.dtype)
-        return jnp.einsum("...rn,rcnk->...rck", xt, M)
+    def _fused_bitlinear_adapter(x, w):
+        return apply_compressed_fused(x, w, interpret=it)
 
     attn_lib.register_flash(_flash_adapter)
-    # The fused y=(x@M)@C kernel is exposed via apply_compressed_fused below;
-    # the layer-level hook keeps the two-einsum structure for autodiff.
-    quantized.register_bitlinear(None)
+    quantized.register_bitlinear_fused(_fused_bitlinear_adapter)
 
 
-def apply_compressed_fused(x, w, block_t: int = 128, interpret: bool | None = None):
+def disable_kernels() -> None:
+    """Unregister every kernel hook (back to the jnp fallbacks).  Only
+    affects callables traced after this call — an already-jitted decode
+    step keeps whichever impl it was traced with."""
+    attn_lib.clear_flash()
+    quantized.clear_bitlinear()
+
+
+def apply_compressed_fused(x, w, block_t: int = 128,
+                           interpret: bool | None = None, mode: str = "auto"):
     """Fused compressed linear: y = (x @ M) @ C via the bitlinear kernel.
-    x (..., d_in) -> (..., d_out)."""
+    x (..., d_in) -> (..., d_out), any number of leading dims (including
+    none); T not divisible by ``block_t`` is padded inside the kernel."""
     C = w["C"]
     n_r, n_c, K, td = C.shape
     lead = x.shape[:-1]
@@ -125,5 +130,5 @@ def apply_compressed_fused(x, w, block_t: int = 128, interpret: bool | None = No
     for d in lead:
         T *= d
     y = bitlinear(x.reshape(T, x.shape[-1]), w["m_packed"], C,
-                  block_t=block_t, interpret=interpret)
+                  block_t=block_t, interpret=interpret, mode=mode)
     return y.reshape(*lead, n_c * td)

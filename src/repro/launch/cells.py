@@ -86,13 +86,36 @@ def _param_trees(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh):
     return shapes, shd.param_shardings(axes, shapes, rules, mesh)
 
 
+def _compressed_param_trees(p_shapes, p_sh, artifact, mesh: Mesh):
+    """Rewrite the dense param template + shardings for a compression
+    artifact: every manifested weight becomes a {"m_packed", "C"} dict
+    (shapes from the manifest) and its sharding goes replicated — the
+    compressed form is already ~an order of magnitude smaller than the
+    dense weight, and the bitlinear kernel wants whole tiles.  Pure
+    template rewriting: the driver decides kernel routing
+    (``ops.enable_kernels()`` before lowering — see dryrun.run_cell)."""
+    rep = NamedSharding(mesh, P())
+    p_shapes = artifact.restore_template(p_shapes)
+    p_sh = artifact.restore_template(
+        p_sh, leaf_fn=lambda e, leaf: {"m_packed": rep, "C": rep}
+    )
+    return p_shapes, p_sh
+
+
 def build_cell(
     arch: str,
     shape_name: str,
     mesh: Mesh,
     pcfg: ParallelConfig | None = None,
+    artifact=None,
     **overrides,
 ) -> Cell:
+    """``artifact`` (a ``CompressionArtifact``, possibly predicted via
+    ``CompressionArtifact.from_plan``) switches serving cells to the
+    compressed-weights param template.  Kernel routing is the caller's
+    choice: enable ``ops.enable_kernels()`` before lowering to get the
+    fused-bitlinear program (dryrun.run_cell does).  Train cells reject
+    artifacts (compression is post-training)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     if pcfg is None:
@@ -101,6 +124,9 @@ def build_cell(
         pcfg = dataclasses.replace(pcfg, **overrides)
 
     if shape.kind == "train":
+        if artifact is not None:
+            raise ValueError("compression artifacts only apply to serving "
+                             "cells (prefill/decode), not train")
         shapes, axes = _axes_trees(cfg)
         opt = make_optimizer(pcfg)
         opt_shapes = jax.eval_shape(opt.init, shapes)
@@ -128,6 +154,8 @@ def build_cell(
     # the capability stays behind make_decode_step(unroll_groups=True).
     unroll_groups = False
     p_shapes, p_sh = _param_trees(cfg, pcfg, mesh)
+    if artifact is not None:
+        p_shapes, p_sh = _compressed_param_trees(p_shapes, p_sh, artifact, mesh)
     B, S = shape.global_batch, shape.seq_len
     cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, S, stacked=not unroll_groups))
     cache_sh = cache_shardings(cfg, pcfg, mesh, B, S, stacked=not unroll_groups)

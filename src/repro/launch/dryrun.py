@@ -35,7 +35,7 @@ os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", "/tmp/jax_cache")
 
 import jax
 
-from repro.configs import ARCHITECTURES, shape_cells
+from repro.configs import ARCHITECTURES, get_config, shape_cells
 from repro.distributed.sharding import activation_rules
 from repro.launch.cells import build_cell
 from repro.launch.mesh import describe, make_production_mesh, set_mesh
@@ -44,10 +44,36 @@ from repro.roofline import collective_bytes, cost_summary, memory_summary
 HBM_BYTES = 16 * 1024**3  # TPU v5e
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+def _predicted_artifact(arch: str):
+    """Plan-predicted compression artifact for ``arch`` (no solver runs —
+    the dry-run only needs manifest shapes to lower the compressed-serving
+    program through the fused bitlinear kernel)."""
+    from repro.compression import CompressionArtifact, CompressionPolicy, plan_compression
+    from repro.training.loop import _axes_trees
+
+    shapes, _ = _axes_trees(get_config(arch))
+    policy = CompressionPolicy(
+        method="alternating", tile_n=32, tile_d=128, rank_ratio=0.125,
+        min_size=1 << 16,
+    )
+    return CompressionArtifact.from_plan(plan_compression(shapes, policy))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             compress: bool = False) -> dict:
+    from repro.kernels import ops
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    cell = build_cell(arch, shape_name, mesh)
+    artifact = _predicted_artifact(arch) if compress else None
+    # kernel hooks are process-global and bind at trace time: compressed
+    # cells lower the fused-kernel serving program, and a prior compressed
+    # cell must not change the baseline cells' lowered programs
+    if compress:
+        ops.enable_kernels()
+    else:
+        ops.disable_kernels()
+    cell = build_cell(arch, shape_name, mesh, artifact=artifact)
     with set_mesh(mesh), activation_rules(cell.pcfg, mesh):
         lowered = jax.jit(
             cell.fn,
@@ -67,6 +93,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
         "shape": shape_name,
         "mesh": describe(mesh),
         "kind": cell.shape.kind,
+        "compressed": bool(compress),
         "pcfg": {
             "microbatches": cell.pcfg.microbatches,
             "optimizer": cell.pcfg.optimizer,
@@ -90,6 +117,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
     )
     os.makedirs(out_dir, exist_ok=True)
     tag = "multipod" if multi_pod else "pod"
+    if compress:
+        tag += "__compressed"
     with open(os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json"), "w") as f:
         json.dump(rec, f, indent=1)
     return rec
@@ -102,6 +131,10 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod-only", action="store_true")
     ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--compress", action="store_true",
+                    help="lower serving cells with a plan-predicted "
+                         "compression artifact: manifest-templated params + "
+                         "the fused bitlinear kernel (serving cells only)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -118,16 +151,23 @@ def main() -> None:
     if args.single_pod_only:
         meshes = [False]
 
+    if args.compress:
+        from repro.configs import SHAPES
+
+        cells = [(a, s) for a, s in cells if SHAPES[s].kind != "train"]
+
     failures = []
     for arch, shape in cells:
         for mp in meshes:
             tag = "multipod" if mp else "pod"
+            if args.compress:
+                tag += "__compressed"
             path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
             if args.skip_existing and os.path.exists(path):
                 print(f"[skip existing] {arch} x {shape} @ {tag}")
                 continue
             try:
-                run_cell(arch, shape, mp, args.out)
+                run_cell(arch, shape, mp, args.out, compress=args.compress)
             except Exception as e:  # noqa: BLE001 - report-and-continue CLI
                 failures.append((arch, shape, tag, repr(e)))
                 traceback.print_exc()

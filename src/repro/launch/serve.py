@@ -43,6 +43,10 @@ def main() -> None:
     ap.add_argument("--rank-ratio", type=float, default=0.5)
     ap.add_argument("--compress-method", default="alternating",
                     choices=["greedy", "alternating", "bbo"])
+    ap.add_argument("--no-fused-bitlinear", action="store_true",
+                    help="escape hatch: serve compressed weights through the "
+                         "unpack+einsum fallback instead of the fused Pallas "
+                         "bitlinear kernel")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -99,9 +103,12 @@ def main() -> None:
 
     eng = Engine(cfg, values, max_len=args.prompt_len + args.steps,
                  batch=args.batch, temperature=args.temperature,
-                 artifact=artifact)
+                 artifact=artifact,
+                 use_fused_bitlinear=False if args.no_fused_bitlinear else None)
     if eng.compression is not None:
-        print(f"[engine] serving compressed weights: {eng.compression}")
+        path = "fused bitlinear kernel" if eng.fused_bitlinear else "unpack+einsum"
+        print(f"[engine] serving compressed weights via {path}: "
+              f"{eng.compression}")
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )

@@ -44,6 +44,11 @@ def register_flash(fn) -> None:
     _FLASH_IMPL = fn
 
 
+def clear_flash() -> None:
+    global _FLASH_IMPL
+    _FLASH_IMPL = None
+
+
 def init_attention(key, cfg: ModelConfig, dtype) -> dict:
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, KV = cfg.num_heads, cfg.num_kv_heads

@@ -113,6 +113,17 @@ def memory_summary(compiled) -> dict:
 
 def cost_summary(compiled) -> dict:
     ca = compiled.cost_analysis()
+    # older jax returns a per-partition list of dicts (also seen when the
+    # program embeds interpret-mode Pallas calls); sum across entries
+    if isinstance(ca, (list, tuple)):
+        merged: dict = {}
+        for entry in ca:
+            for k, v in (entry or {}).items():
+                try:
+                    merged[k] = merged.get(k, 0.0) + float(v)
+                except (TypeError, ValueError):
+                    continue
+        ca = merged
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

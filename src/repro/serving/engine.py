@@ -112,6 +112,16 @@ class Engine:
     tensor present and with the manifested {m_packed, C} shapes) and
     ``self.compression`` summarises what is being served; the manifest, not
     shape-sniffing, is the statement of which weights are compressed.
+
+    ``use_fused_bitlinear`` controls the compressed-layer hot path:
+      None (default)  enable the fused Pallas bitlinear kernel iff an
+                      artifact is present, so prefill and decode jit-lower
+                      through it (Pallas interpret mode off-TPU);
+      True            enable unconditionally;
+      False           escape hatch — clear the fused hook so this engine's
+                      traces take the unpack+einsum fallback.
+    The hook is process-global and bound at trace time (construction order
+    matters when mixing engines with different settings in one process).
     """
 
     cfg: ModelConfig
@@ -121,6 +131,7 @@ class Engine:
     temperature: float = 0.0
     eos_id: int = 1
     artifact: object = None
+    use_fused_bitlinear: bool | None = None
 
     def __post_init__(self):
         self.compression = None
@@ -146,6 +157,19 @@ class Engine:
                 "ratio": round(art.total_ratio, 3),
                 "methods": methods,
             }
+
+        from repro.core import quantized
+        from repro.kernels import ops
+
+        fused = self.use_fused_bitlinear
+        if fused is None:
+            fused = self.artifact is not None
+        if fused:
+            ops.enable_kernels()
+        elif self.use_fused_bitlinear is False:
+            quantized.clear_bitlinear()
+        self.fused_bitlinear = fused and quantized.has_fused_bitlinear()
+
         self.prefill = jax.jit(make_prefill(self.cfg))
         self.decode = jax.jit(make_decode_step(self.cfg))
 

@@ -9,3 +9,14 @@ import pytest
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_kernel_hooks():
+    """Kernel hooks are process-global (enable_kernels, Engine(artifact=...)
+    sets them) — clear after every test so no test inherits another's
+    kernel routing."""
+    yield
+    from repro.kernels import ops
+
+    ops.disable_kernels()

@@ -21,6 +21,9 @@ def _pack_tiles(M):
     (128, 4, 2, 32, 8, 128),
     (32, 1, 1, 8, 3, 64),     # paper-scale tile (N=8, K=3)
     (64, 2, 2, 32, 12, 256),
+    (3, 2, 3, 16, 4, 32),     # decode batch: T prime, padded inside
+    (13, 2, 2, 16, 5, 64),    # multi-block with a ragged tail
+    (1, 1, 2, 8, 3, 32),      # single sequence decode
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_bitlinear_matches_ref(T, nr, nc, tn, K, td, dtype):
@@ -30,13 +33,15 @@ def test_bitlinear_matches_ref(T, nr, nc, tn, K, td, dtype):
     Mp = _pack_tiles(M)
     C = (jax.random.normal(k2, (nr, nc, K, td)) * 0.2).astype(dtype)
     x = jax.random.normal(k3, (T, nr * tn)).astype(dtype)
-    y_k = ops.bitlinear(x, Mp, C, block_t=min(128, T), interpret=True)
     y_r = ref.bitlinear_ref(x, Mp, C)
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
-    np.testing.assert_allclose(
-        np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
-        rtol=tol, atol=tol,
-    )
+    for mode in ("auto", "grid", "decode"):
+        y_k = ops.bitlinear(x, Mp, C, block_t=min(128, max(T, 8)),
+                            interpret=True, mode=mode)
+        np.testing.assert_allclose(
+            np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
+            rtol=tol, atol=tol, err_msg=f"mode={mode}",
+        )
 
 
 @pytest.mark.parametrize("B,H,KV,S,hd,win,bq", [

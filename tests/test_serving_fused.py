@@ -1,0 +1,297 @@
+"""Compressed serving through the fused bitlinear kernel.
+
+The parity triangle — ``decompress`` (dense oracle), ``apply_compressed``
+/ ``apply_compressed_einsum`` (two-einsum layer path) and
+``apply_compressed_fused`` (Pallas kernel, interpret mode) — must agree on
+arbitrary geometries, and the ``Engine`` must produce identical tokens
+with and without the fused kernel enabled.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the deterministic sweep below still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.core import quantized
+from repro.core.decomposition import pack_bits
+from repro.kernels import ops
+from repro.models import forward, init_model
+from repro.models.params import split
+from repro.serving.engine import Engine
+
+
+@pytest.fixture
+def clean_hooks():
+    """Kernel hooks are process-global — never leak them across tests."""
+    ops.disable_kernels()
+    yield
+    ops.disable_kernels()
+
+
+def _pack_tiles(M):
+    nr, nc = M.shape[:2]
+    return jnp.stack([
+        jnp.stack([pack_bits(M[r, c]) for c in range(nc)]) for r in range(nr)
+    ])
+
+
+def _random_w(key, nr, nc, tn, K, td, c_dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    M = jnp.sign(jax.random.normal(k1, (nr, nc, tn, K)))
+    M = jnp.where(M == 0, 1.0, M)
+    C = (jax.random.normal(k2, (nr, nc, K, td)) * 0.3).astype(c_dtype)
+    return {"m_packed": _pack_tiles(M), "C": C}
+
+
+# ---------------------------------------------------------------------------
+# parity triangle (property-based)
+# ---------------------------------------------------------------------------
+
+
+def _check_triangle(nr, nc, tn, K, td, lead, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    w = _random_w(key, nr, nc, tn, K, td)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (*lead, nr * tn)).astype(dtype)
+
+    y_dense = (x.astype(jnp.float32)
+               @ quantized.decompress(w, jnp.float32))
+    y_einsum = quantized.apply_compressed_einsum(x, w)
+    y_fused = ops.apply_compressed_fused(x, w, block_t=8, interpret=True)
+
+    assert y_einsum.shape == (*lead, nc * td) == y_fused.shape
+    assert y_einsum.dtype == x.dtype == y_fused.dtype
+    tol = 5e-5 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(
+        np.asarray(y_fused, np.float32), np.asarray(y_einsum, np.float32),
+        rtol=tol, atol=tol,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_einsum, np.float32), np.asarray(y_dense, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("nr,nc,tn,K,td,lead,dtype", [
+    (2, 3, 16, 4, 32, (), jnp.float32),           # 0 leading dims
+    (1, 2, 8, 3, 32, (5,), jnp.float32),          # K not a multiple of 8
+    (2, 2, 16, 5, 8, (2, 3), jnp.bfloat16),       # 2 leading dims, bf16
+    (3, 1, 8, 7, 32, (2, 1, 3), jnp.float32),     # 3 leading dims
+    (2, 2, 16, 12, 32, (4, 8), jnp.bfloat16),     # K > 8
+])
+def test_parity_triangle_sweep(nr, nc, tn, K, td, lead, dtype):
+    _check_triangle(nr, nc, tn, K, td, lead, dtype, seed=nr * 100 + K)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        nr=st.integers(1, 3),
+        nc=st.integers(1, 3),
+        tn=st.sampled_from([8, 16]),
+        K=st.integers(1, 7),          # includes K not a multiple of 8
+        td=st.sampled_from([8, 32]),
+        lead=st.sampled_from([(), (5,), (2, 3), (2, 1, 3)]),
+        bf16=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_parity_triangle_property(nr, nc, tn, K, td, lead, bf16, seed):
+        dtype = jnp.bfloat16 if bf16 else jnp.float32
+        _check_triangle(nr, nc, tn, K, td, lead, dtype, seed)
+
+
+@pytest.mark.parametrize("mode", ["auto", "grid", "decode"])
+def test_bitlinear_decode_batch_t3(mode):
+    """Regression: T=3 (the decode shape) used to hit ``assert T % bt == 0``."""
+    w = _random_w(jax.random.PRNGKey(3), 2, 3, 16, 4, 32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 32))
+    y = ops.bitlinear(x, w["m_packed"], w["C"], block_t=128,
+                      interpret=True, mode=mode)
+    from repro.kernels import ref
+
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.bitlinear_ref(x, w["m_packed"], w["C"])),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_bitlinear_pad_multi_block():
+    """T=13 with block_t=8: two blocks plus padding, grid schedule."""
+    w = _random_w(jax.random.PRNGKey(5), 2, 2, 16, 5, 16)
+    x = jax.random.normal(jax.random.PRNGKey(6), (13, 32))
+    from repro.kernels import ref
+
+    y = ops.bitlinear(x, w["m_packed"], w["C"], block_t=8,
+                      interpret=True, mode="grid")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.bitlinear_ref(x, w["m_packed"], w["C"])),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# hook layer
+# ---------------------------------------------------------------------------
+
+
+def test_register_none_raises(clean_hooks):
+    with pytest.raises(ValueError, match="clear_bitlinear"):
+        quantized.register_bitlinear(None)
+    with pytest.raises(ValueError, match="clear_bitlinear"):
+        quantized.register_bitlinear_fused(None)
+    with pytest.raises(TypeError):
+        quantized.register_bitlinear_fused("not-callable")
+
+
+def test_enable_disable_roundtrip(clean_hooks):
+    assert not quantized.has_fused_bitlinear()
+    ops.enable_kernels(interpret=True)
+    assert quantized.has_fused_bitlinear()
+    # enabling again must not clobber to None (the old footgun)
+    ops.enable_kernels(interpret=True)
+    assert quantized.has_fused_bitlinear()
+    ops.disable_kernels()
+    assert not quantized.has_fused_bitlinear()
+
+
+def test_fused_dispatch_and_custom_vjp(clean_hooks):
+    """apply_compressed routes through the fused kernel when registered and
+    its gradients (x and C) match the einsum path exactly in structure."""
+    w = _random_w(jax.random.PRNGKey(0), 2, 2, 16, 4, 32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+
+    y_ref = quantized.apply_compressed(x, w)
+    gx_ref = jax.grad(lambda x: jnp.sum(quantized.apply_compressed(x, w) ** 2))(x)
+    gc_ref = jax.grad(
+        lambda C: jnp.sum(
+            quantized.apply_compressed(x, {"m_packed": w["m_packed"], "C": C}) ** 2
+        )
+    )(w["C"])
+
+    ops.enable_kernels(interpret=True)
+    y = quantized.apply_compressed(x, w)
+    gx = jax.grad(lambda x: jnp.sum(quantized.apply_compressed(x, w) ** 2))(x)
+    gc = jax.grad(
+        lambda C: jnp.sum(
+            quantized.apply_compressed(x, {"m_packed": w["m_packed"], "C": C}) ** 2
+        )
+    )(w["C"])
+
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(gc_ref), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# full model / engine
+# ---------------------------------------------------------------------------
+
+
+def _compressed_model(key, arch="qwen3-32b"):
+    import dataclasses
+
+    from repro import compression as comp
+
+    cfg = reduced_for_smoke(get_config(arch))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    vals, _ = split(init_model(key, cfg))
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+    plan = comp.plan_compression(vals, policy)
+    cvals, artifact = comp.execute_plan(plan, vals, key=key)
+    return cfg, vals, cvals, artifact
+
+
+def test_enable_kernels_forward_unchanged(key, clean_hooks):
+    """enable_kernels(interpret=True) must not change full-model forward —
+    flash-attention adapter AND fused bitlinear included."""
+    cfg, vals, cvals, _ = _compressed_model(key)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+
+    ref_dense, _, _ = forward(vals, {"tokens": toks}, cfg)
+    ref_comp, _, _ = forward(cvals, {"tokens": toks}, cfg)
+
+    ops.enable_kernels(interpret=True)
+    got_dense, _, _ = forward(vals, {"tokens": toks}, cfg)
+    got_comp, _, _ = forward(cvals, {"tokens": toks}, cfg)
+
+    np.testing.assert_allclose(
+        np.asarray(got_dense, np.float32), np.asarray(ref_dense, np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_comp, np.float32), np.asarray(ref_comp, np.float32),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_engine_decode_lowers_through_fused_kernel(key, clean_hooks):
+    """Engine + artifact: tokens identical with/without the fused kernel,
+    and the fused impl really is what prefill/decode trace through."""
+    cfg, _, cvals, artifact = _compressed_model(key)
+    prompts = jax.random.randint(key, (3, 8), 0, cfg.vocab_size)  # odd batch
+
+    eng_einsum = Engine(cfg, cvals, max_len=24, batch=3, artifact=artifact,
+                        use_fused_bitlinear=False)
+    assert eng_einsum.fused_bitlinear is False
+    assert not quantized.has_fused_bitlinear()
+    out_einsum = eng_einsum.generate(prompts, steps=8)
+
+    eng_fused = Engine(cfg, cvals, max_len=24, batch=3, artifact=artifact)
+    assert eng_fused.fused_bitlinear is True
+    # count trace-time hits of the fused impl: generate() traces prefill
+    # and decode AFTER this registration, so >0 proves the jitted steps
+    # lower through the kernel path (not the einsum fallback)
+    calls = []
+
+    def counting(x, w):
+        calls.append(jnp.shape(x))
+        return ops.apply_compressed_fused(x, w, interpret=True)
+
+    quantized.register_bitlinear_fused(counting)
+    out_fused = eng_fused.generate(prompts, steps=8)
+    assert len(calls) > 0
+    np.testing.assert_array_equal(np.asarray(out_einsum), np.asarray(out_fused))
+
+
+def test_engine_without_artifact_keeps_hooks_off(key, clean_hooks):
+    cfg = reduced_for_smoke(get_config("qwen3-32b"))
+    vals, _ = split(init_model(key, cfg))
+    eng = Engine(cfg, vals, max_len=16, batch=2)
+    assert eng.fused_bitlinear is False
+    assert not quantized.has_fused_bitlinear()
+
+
+def test_predicted_artifact_matches_execution(key):
+    """CompressionArtifact.from_plan predicts the exact stored shapes that
+    execute_plan later produces (what the dry-run cells rely on)."""
+    from repro import compression as comp
+    from repro.compression.artifact import CompressionArtifact
+    from repro.compression.plan import tree_paths
+
+    cfg, vals, cvals, artifact = _compressed_model(key)
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+    plan = comp.plan_compression(vals, policy)
+    predicted = CompressionArtifact.from_plan(plan)
+    assert predicted.validate_params(cvals) == []
+    assert predicted.manifest["tensors"].keys() == artifact.manifest["tensors"].keys()
+    # template rewrite works on ShapeDtypeStruct trees too (dry-run input)
+    sds = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), vals)
+    tmpl = predicted.restore_template(sds)
+    flat_paths = {p for p, _ in tree_paths(tmpl)}
+    for path in predicted.manifest["tensors"]:
+        assert f"{path}/m_packed" in flat_paths and f"{path}/C" in flat_paths
