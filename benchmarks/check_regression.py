@@ -1,0 +1,210 @@
+"""Benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
+
+CI regenerates BENCH_serve.json / BENCH_compress.json / BENCH_ising.json on
+every run (the "fast benches") — this gate is what turns those files from
+decoration into a contract.  It compares each freshly produced file against
+the committed baseline (copied aside before the bench steps overwrite the
+working tree) and fails when a throughput metric drops by more than the
+tolerance band:
+
+  serve     per (arch, batch, decode_steps) row: dense / einsum / fused
+            decode tok/s,
+  ising     per (solver, n, problems) row: jnp / pallas spin-updates/s,
+  compress  per (method, max_pool_tiles) row: pooled tiles/s
+            (total_tiles / pooled_s — the batched-solve throughput).
+
+Comparisons only run on *comparable* configs: a file whose ``device`` or
+``pallas_mode`` differs from the baseline's (e.g. a TPU-produced baseline
+checked against a CPU CI run) is reported and skipped rather than failed —
+cross-backend wall-clock is not a regression.  Rows present in the baseline
+but missing from the fresh file fail (a silently dropped bench case reads
+as "still covered" when it is not); new rows are reported as informational.
+
+A markdown table goes to stdout and, when ``GITHUB_STEP_SUMMARY`` is set,
+to the job summary.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline-dir bench_baseline [--fresh-dir .] [--tolerance 0.15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Per-suite comparison spec: row key fields, direct higher-is-better
+# metrics, and derived metrics computed from a row.
+SUITES = {
+    "BENCH_serve.json": {
+        "suite": "serve",
+        "comparable": ("device", "pallas_mode"),
+        "key": ("arch", "batch", "decode_steps"),
+        "metrics": ("dense_toks_per_s", "einsum_toks_per_s", "fused_toks_per_s"),
+        "derived": {},
+    },
+    "BENCH_ising.json": {
+        "suite": "ising",
+        "comparable": ("device", "pallas_mode"),
+        "key": ("solver", "n", "problems"),
+        "metrics": ("jnp_spin_updates_per_s", "pallas_spin_updates_per_s"),
+        "derived": {},
+    },
+    "BENCH_compress.json": {
+        "suite": "compress",
+        "comparable": ("device",),
+        "key": ("method", "max_pool_tiles"),
+        "metrics": (),
+        "derived": {
+            "pooled_tiles_per_s": lambda r: r["total_tiles"] / r["pooled_s"],
+        },
+    },
+}
+
+
+def _row_key(row: dict, fields: tuple) -> tuple:
+    return tuple(row.get(f) for f in fields)
+
+
+def _row_metrics(row: dict, spec: dict) -> dict:
+    out = {m: row[m] for m in spec["metrics"] if m in row}
+    for name, fn in spec["derived"].items():
+        try:
+            out[name] = fn(row)
+        except (KeyError, ZeroDivisionError):
+            pass
+    return out
+
+
+def compare_file(name: str, baseline: dict, fresh: dict, tolerance: float):
+    """-> (rows, failures). Each row is
+    (suite, key, metric, base, fresh, delta_frac, status)."""
+    spec = SUITES[name]
+    rows, failures = [], []
+    mismatched = [
+        f for f in spec["comparable"]
+        if baseline.get(f) != fresh.get(f)
+    ]
+    if mismatched:
+        rows.append((
+            spec["suite"], "-", "-", "-", "-", "-",
+            "skipped: " + ", ".join(
+                f"{f} {baseline.get(f)!r} vs {fresh.get(f)!r}" for f in mismatched
+            ),
+        ))
+        return rows, failures
+
+    fresh_rows = {
+        _row_key(r, spec["key"]): r for r in fresh.get("results", [])
+    }
+    seen = set()
+    for brow in baseline.get("results", []):
+        key = _row_key(brow, spec["key"])
+        seen.add(key)
+        frow = fresh_rows.get(key)
+        keystr = "/".join(str(k) for k in key)
+        if frow is None:
+            rows.append((spec["suite"], keystr, "-", "-", "-", "-", "MISSING"))
+            failures.append(f"{spec['suite']} {keystr}: row missing from fresh run")
+            continue
+        bm, fm = _row_metrics(brow, spec), _row_metrics(frow, spec)
+        for metric in bm:
+            if metric not in fm:
+                rows.append((spec["suite"], keystr, metric, bm[metric], "-", "-", "MISSING"))
+                failures.append(f"{spec['suite']} {keystr}: metric {metric} missing")
+                continue
+            base_v, fresh_v = float(bm[metric]), float(fm[metric])
+            delta = (fresh_v - base_v) / base_v if base_v else 0.0
+            if delta < -tolerance:
+                status = "REGRESSION"
+                failures.append(
+                    f"{spec['suite']} {keystr} {metric}: "
+                    f"{base_v:.1f} -> {fresh_v:.1f} ({delta:+.1%} < -{tolerance:.0%})"
+                )
+            else:
+                status = "ok"
+            rows.append((spec["suite"], keystr, metric, base_v, fresh_v, delta, status))
+    for key in fresh_rows:
+        if key not in seen:
+            keystr = "/".join(str(k) for k in key)
+            rows.append((spec["suite"], keystr, "-", "-", "-", "-", "new"))
+    return rows, failures
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:,.1f}"
+    return str(v)
+
+
+def render_markdown(all_rows: list, tolerance: float, failures: list) -> str:
+    lines = [
+        f"## Benchmark regression gate (tolerance {tolerance:.0%})",
+        "",
+        "| suite | case | metric | baseline | fresh | delta | status |",
+        "|---|---|---|---:|---:|---:|---|",
+    ]
+    for suite, key, metric, base, freshv, delta, status in all_rows:
+        d = f"{delta:+.1%}" if isinstance(delta, float) else delta
+        lines.append(
+            f"| {suite} | {key} | {metric} | {_fmt(base)} | {_fmt(freshv)} "
+            f"| {d} | {status} |"
+        )
+    lines.append("")
+    lines.append(
+        f"**{'FAIL' if failures else 'PASS'}** — {len(failures)} regression(s)"
+    )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json "
+                         "(copy them aside before the bench steps overwrite "
+                         "the working tree)")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="fail on a throughput drop larger than this fraction")
+    ap.add_argument("--files", nargs="*", default=sorted(SUITES),
+                    help="subset of BENCH files to check")
+    args = ap.parse_args()
+
+    all_rows, failures = [], []
+    for name in args.files:
+        if name not in SUITES:
+            raise SystemExit(f"unknown bench file {name!r} (known: {sorted(SUITES)})")
+        bpath = os.path.join(args.baseline_dir, name)
+        fpath = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(bpath):
+            all_rows.append((SUITES[name]["suite"], "-", "-", "-", "-", "-",
+                             "no baseline (first run?)"))
+            continue
+        if not os.path.exists(fpath):
+            all_rows.append((SUITES[name]["suite"], "-", "-", "-", "-", "-",
+                             "MISSING fresh file"))
+            failures.append(f"{name}: fresh file not produced")
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        rows, fails = compare_file(name, baseline, fresh, args.tolerance)
+        all_rows.extend(rows)
+        failures.extend(fails)
+
+    md = render_markdown(all_rows, args.tolerance, failures)
+    print(md)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(md + "\n")
+    if failures:
+        print("\n".join(f"FAIL: {m}" for m in failures), file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -237,3 +237,26 @@ def run_all() -> None:
     bench_sa_throughput()
     bench_ising_suite()
     bench_compress_suite()
+
+
+def main() -> None:
+    """CLI for CI: run one suite (refreshing its BENCH_*.json) or all."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "ising", "compress"],
+                    help="ising/compress refresh BENCH_ising.json / "
+                         "BENCH_compress.json respectively")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.suite == "ising":
+        bench_ising_suite()
+    elif args.suite == "compress":
+        bench_compress_suite()
+    else:
+        run_all()
+
+
+if __name__ == "__main__":
+    main()

@@ -66,24 +66,31 @@ def _byte_counts(artifact) -> dict:
     }
 
 
-def _decode_toks_per_s(eng: Engine, cfg, batch: int, steps: int) -> float:
-    """Prefill once, then time ``steps`` jitted decode calls."""
+def _decode_toks_per_s(eng: Engine, cfg, batch: int, steps: int,
+                       reps: int = 3) -> float:
+    """Prefill once, then time ``steps`` jitted decode calls — best of
+    ``reps`` (scheduler noise on shared CI runners makes single-shot
+    wall-clock trip the regression gate; min-of-reps is the standard
+    de-noiser, cf. kernel_bench._best_of)."""
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (batch, PROMPT_LEN), 0, cfg.vocab_size
     )
     cache = init_cache(cfg, batch, PROMPT_LEN + steps + 2)
     last, cache = eng.prefill(eng.params, {"tokens": prompts}, cache)
-    cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    cur0 = jnp.argmax(last, axis=-1).astype(jnp.int32)
     # warm-up: compile the decode step outside the timed region
-    logits, _ = eng.decode(eng.params, cur, cache, PROMPT_LEN)
+    logits, _ = eng.decode(eng.params, cur0, cache, PROMPT_LEN)
     jax.block_until_ready(logits)
-    t0 = time.perf_counter()
-    for t in range(steps):
-        logits, cache = eng.decode(eng.params, cur, cache, PROMPT_LEN + t)
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
-    return batch * steps / dt
+    best = float("inf")
+    for _ in range(reps):
+        cur = cur0
+        t0 = time.perf_counter()
+        for t in range(steps):
+            logits, cache = eng.decode(eng.params, cur, cache, PROMPT_LEN + t)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(logits)
+        best = min(best, time.perf_counter() - t0)
+    return batch * steps / best
 
 
 def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:

@@ -120,11 +120,12 @@ class CompressionArtifact:
         for t in plan.tensors:
             r, c = t.d_in // t.tile_n, t.d_out // t.tile_d
             kb = (t.K + 7) // 8
-            lead = [t.groups] if len(t.shape) == 3 else []
+            lead = list(t.shape[:-2])
             tensors[t.path] = {
                 "shape": list(t.shape),
                 "dtype": t.dtype,
                 "groups": t.groups,
+                "group_dims": lead,
                 "tile_n": t.tile_n,
                 "tile_d": t.tile_d,
                 "K": t.K,

@@ -51,10 +51,13 @@ def _validate(plan: CompressionPlan, leaves: dict) -> None:
 
 
 def _tensor_keys(key, t: TensorPlan):
-    """Per-tile keys for one tensor, exactly as the legacy walk drew them."""
+    """Per-tile keys for one tensor, exactly as the legacy walk drew them.
+    Stacked weights (3D layer stacks, 4D MoE expert stacks) fold the
+    flattened group-slice index — for 3D this is the legacy per-slice
+    derivation bit-for-bit; 4D extends it over the (layer, expert) raster."""
     k = jax.random.fold_in(key, t.leaf_index)
     tiles_per_slice = t.num_tiles // t.groups
-    if len(t.shape) == 3:
+    if len(t.shape) > 2:
         slice_keys = [jax.random.fold_in(k, g) for g in range(t.groups)]
     else:
         slice_keys = [k]
@@ -64,9 +67,11 @@ def _tensor_keys(key, t: TensorPlan):
 
 
 def _tensor_tiles(leaf, t: TensorPlan):
-    """(num_tiles, tn, td) stack across group slices (g-major, r/c-minor)."""
-    if len(t.shape) == 3:
-        stacks = [tile_matrix(leaf[g], t.tile_n, t.tile_d) for g in range(t.groups)]
+    """(num_tiles, tn, td) stack across group slices (g-major, r/c-minor).
+    Any number of leading stack dims collapses to the flat group axis."""
+    if len(t.shape) > 2:
+        flat = leaf.reshape(t.groups, t.d_in, t.d_out)
+        stacks = [tile_matrix(flat[g], t.tile_n, t.tile_d) for g in range(t.groups)]
         return jnp.concatenate(stacks)
     return tile_matrix(leaf, t.tile_n, t.tile_d)
 
@@ -109,15 +114,15 @@ def _shard_pool(tiles, keys, mesh):
 
 
 def _pack_tensor(t: TensorPlan, M_seg, C_seg, dtype):
-    """Pooled rows for one tensor -> the {"m_packed", "C"} leaf."""
+    """Pooled rows for one tensor -> the {"m_packed", "C"} leaf.  Leading
+    stack dims are preserved (a 4D (L, E, d, f) expert stack packs to
+    (L, E, r, c, tn, kb) so the layer-group scan slices it to the
+    (E, r, c, tn, kb) grouped-kernel layout per layer)."""
     r, c = t.d_in // t.tile_n, t.d_out // t.tile_d
+    lead = t.shape[:-2]
     packed = jax.vmap(dec.pack_bits)(M_seg)
-    if len(t.shape) == 3:
-        packed = packed.reshape(t.groups, r, c, t.tile_n, -1)
-        C_out = C_seg.reshape(t.groups, r, c, t.K, t.tile_d).astype(dtype)
-    else:
-        packed = packed.reshape(r, c, t.tile_n, -1)
-        C_out = C_seg.reshape(r, c, t.K, t.tile_d).astype(dtype)
+    packed = packed.reshape(*lead, r, c, t.tile_n, -1)
+    C_out = C_seg.reshape(*lead, r, c, t.K, t.tile_d).astype(dtype)
     return {"m_packed": packed, "C": C_out}
 
 
@@ -192,6 +197,9 @@ def execute_plan(
             "tile_n": tn, "tile_d": td, "K": K, "method": method,
             "num_tiles": total,
             "num_tensors": len(members),
+            # group slices feeding the pool: the E axis of MoE stacks
+            # multiplies the batched solve, it never fragments it
+            "group_slices": sum(t.groups for t in members),
             "chunks": n_chunks,
             # For BBO every lock-step iteration issues ONE solve_many over a
             # whole chunk: the actual per-call batch sizes (the final chunk
@@ -227,6 +235,7 @@ def execute_plan(
             "shape": list(t.shape),
             "dtype": t.dtype,
             "groups": t.groups,
+            "group_dims": list(t.shape[:-2]),
             "tile_n": t.tile_n,
             "tile_d": t.tile_d,
             "K": t.K,

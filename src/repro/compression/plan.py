@@ -34,8 +34,11 @@ class TensorPlan:
     ``leaf_index`` is the tensor's position in the flattened values tree —
     it seeds the per-tensor PRNG fold exactly like the legacy per-tensor
     walk, which is what makes pooled execution bit-reproducible against it.
-    ``groups`` is the leading stack dim for (G, d_in, d_out) weights (1 for
-    plain 2D).  ``num_tiles`` counts tiles across all group slices.
+    ``groups`` is the product of all leading stack dims: 1 for plain 2D, G
+    for (G, d_in, d_out) layer stacks, and L*E for MoE expert stacks
+    (L, E, d_in, d_out) as stored under the layer-group scan — every group
+    slice is an independent d_in x d_out problem.  ``num_tiles`` counts
+    tiles across all group slices.
     """
 
     path: str
@@ -199,8 +202,16 @@ def tree_paths(values):
     ]
 
 
-def _structurally_eligible(path: str, leaf) -> bool:
-    return path.endswith("/w") and getattr(leaf, "ndim", 0) in (2, 3)
+def _structurally_plausible(path: str, leaf) -> bool:
+    """Matrix-shaped float leaves are the report universe: 2D weights, 3D
+    (G, d_in, d_out) layer/expert stacks and 4D (L, E, d_in, d_out) scan-
+    stacked MoE expert tensors.  Whether they actually compress is decided
+    by the policy (targets/exclude/rules) — this gate only keeps scalars,
+    vectors and integer leaves out of the skip report.  jnp.issubdtype, not
+    np: bfloat16 (the default model dtype) is a void type to numpy."""
+    if getattr(leaf, "ndim", 0) not in (2, 3, 4):
+        return False
+    return jax.numpy.issubdtype(jax.numpy.dtype(leaf.dtype), jax.numpy.floating)
 
 
 def plan_compression(values, policy: CompressionPolicy) -> CompressionPlan:
@@ -210,16 +221,23 @@ def plan_compression(values, policy: CompressionPolicy) -> CompressionPlan:
 
     tensors, skipped = [], []
     for i, (path, leaf) in enumerate(tree_paths(values)):
-        if not _structurally_eligible(path, leaf):
+        if not _structurally_plausible(path, leaf):
+            continue
+        if not policy.matches_target(path):
+            # skip_reason prefers the more specific exclusion token when a
+            # non-target path is also excluded (e.g. stacked norm scales)
+            skipped.append((path, policy.skip_reason(path)))
             continue
         settings = policy.resolve(path)
         if settings is None:
             skipped.append((path, policy.skip_reason(path)))
             continue
-        groups = leaf.shape[0] if leaf.ndim == 3 else 1
+        groups = 1
+        for s in leaf.shape[:-2]:
+            groups *= int(s)
         d_in, d_out = leaf.shape[-2], leaf.shape[-1]
         # the per-slice size is the gate (as the legacy per-slice
-        # compress_matrix walk applied it): a (G, d_in, d_out) stack is G
+        # compress_matrix walk applied it): a stacked weight is ``groups``
         # independent d_in x d_out problems
         if d_in * d_out < settings.min_size:
             skipped.append((path, "below min_size"))

@@ -34,12 +34,21 @@ __all__ = [
     "CompressionPolicy",
     "ResolvedSettings",
     "DEFAULT_EXCLUDE",
+    "DEFAULT_TARGETS",
 ]
 
 # Paths containing any of these substrings are never compressed (norm scales,
 # router logits, embeddings, conv stems and SSM scalars are structurally
 # unsuited to tile decomposition).  Overridable per policy.
 DEFAULT_EXCLUDE = ("norm", "router", "embed", "conv", "A_log", "dt_bias", "D")
+
+# A tensor path must match one of these regexes to be a compression
+# candidate at all.  The defaults cover the two weight layouts in the model
+# zoo: plain dense layers store their matrix under a ``.../w`` leaf, and MoE
+# blocks store per-expert stacks directly as ``.../gate``, ``.../up`` and
+# ``.../down`` (E, d_in, d_out) arrays (stacked to 4D under the layer-group
+# scan).  Overridable per policy — the predicate is policy data, not code.
+DEFAULT_TARGETS = (r"/w$", r"/(gate|up|down)$")
 
 _METHODS = ("greedy", "alternating", "bbo", "skip")
 
@@ -96,15 +105,26 @@ class CompressionPolicy:
     bbo_iters: int = 64             # BBO refinement iterations
     solver_backend: str = "auto"    # Ising backend for bbo: auto|pallas|jnp
     exclude: tuple = DEFAULT_EXCLUDE
+    targets: tuple = DEFAULT_TARGETS  # path regexes: candidates must match one
     rules: tuple = ()               # ordered CompressionRule, first match wins
 
     def __post_init__(self):
         if self.method not in _METHODS[:-1]:
             raise ValueError(f"unknown default method {self.method!r}")
         object.__setattr__(self, "exclude", tuple(self.exclude))
+        object.__setattr__(self, "targets", tuple(self.targets))
         object.__setattr__(self, "rules", tuple(self.rules))
+        for t in self.targets:
+            re.compile(t)           # fail fast on bad regexes
 
     # -- resolution ---------------------------------------------------------
+    def matches_target(self, path: str) -> bool:
+        """Whether ``path`` is a compression candidate at all.  This replaces
+        the old hardcoded ``path.endswith("/w")`` predicate: what counts as a
+        weight is policy data, so MoE expert stacks (``gate``/``up``/``down``)
+        are first-class targets and projects can scope targets freely."""
+        return any(re.search(t, path) for t in self.targets)
+
     def resolve(self, path: str) -> ResolvedSettings | None:
         """Settings for ``path``, or None (with no settings) when a policy
         decision keeps it dense.  Structural checks (shape, divisibility,
@@ -129,19 +149,23 @@ class CompressionPolicy:
         )
 
     def skip_reason(self, path: str) -> str:
-        """Why ``resolve`` returned None (only valid when it did)."""
+        """Why ``resolve`` returned None (or the path is not a target).
+        Exclusion wins over target mismatch: it names the specific token."""
         if any(tok in path for tok in self.exclude):
             toks = [t for t in self.exclude if t in path]
             return f"excluded ({toks[0]})"
         rule = next((r for r in self.rules if r.matches(path)), None)
         if rule is not None and rule.method == "skip":
             return f"rule {rule.pattern!r} -> skip"
+        if not self.matches_target(path):
+            return "not matched by policy"
         return "not skipped"
 
     # -- serialisation ------------------------------------------------------
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["exclude"] = list(self.exclude)
+        d["targets"] = list(self.targets)
         d["rules"] = [
             {k: v for k, v in dataclasses.asdict(r).items() if v is not None}
             for r in self.rules
@@ -155,6 +179,7 @@ class CompressionPolicy:
     def from_dict(cls, d: dict) -> "CompressionPolicy":
         d = dict(d)
         d["exclude"] = tuple(d.get("exclude", DEFAULT_EXCLUDE))
+        d["targets"] = tuple(d.get("targets", DEFAULT_TARGETS))
         d["rules"] = tuple(
             CompressionRule(**r) for r in d.get("rules", ())
         )

@@ -28,15 +28,20 @@ import numpy as np
 
 __all__ = [
     "is_compressed",
+    "is_grouped",
     "apply_compressed",
     "apply_compressed_einsum",
+    "apply_compressed_grouped",
+    "apply_compressed_grouped_einsum",
     "decompress",
     "compressed_num_bytes",
     "dense_num_bytes",
     "register_bitlinear",
     "register_bitlinear_fused",
+    "register_bitlinear_grouped",
     "clear_bitlinear",
     "has_fused_bitlinear",
+    "has_grouped_bitlinear",
 ]
 
 _KEYS = frozenset({"m_packed", "C"})
@@ -51,10 +56,16 @@ _KEYS = frozenset({"m_packed", "C"})
 #   _BITLINEAR_FUSED_IMPL whole-layer hook, y = (x @ M) @ C in one kernel —
 #                         the serving hot path (no per-step unpack of M),
 #                         registered by repro.kernels.ops.enable_kernels().
-# Both are process-global: a registered fused impl reroutes every
-# compressed layer in every model traced afterwards.
+#   _BITLINEAR_GROUPED_IMPL
+#                         grouped whole-layer hook for per-expert stacks:
+#                         y_e = (x_e @ M_e) @ C_e over a leading expert axis
+#                         (the MoE dispatch layout) — registered alongside
+#                         the fused impl by enable_kernels().
+# All are process-global: a registered impl reroutes every compressed layer
+# in every model traced afterwards.
 _BITLINEAR_IMPL = None
 _BITLINEAR_FUSED_IMPL = None
+_BITLINEAR_GROUPED_IMPL = None
 
 
 def _check_impl(fn, name: str):
@@ -85,19 +96,41 @@ def register_bitlinear_fused(fn) -> None:
     _BITLINEAR_FUSED_IMPL = fn
 
 
+def register_bitlinear_grouped(fn) -> None:
+    """Register the grouped fused hook ``fn(x, w) -> y`` computing the
+    per-expert compressed layer y_e = (x_e @ M_e) @ C_e in one kernel, with
+    x (E, ..., d_in) and w the grouped {"m_packed" (E, r, c, tn, kb),
+    "C" (E, r, c, K, td)} stack.  Gradients stay exact via the
+    einsum-derived custom VJP in ``apply_compressed_grouped``."""
+    _check_impl(fn, "register_bitlinear_grouped")
+    global _BITLINEAR_GROUPED_IMPL
+    _BITLINEAR_GROUPED_IMPL = fn
+
+
 def clear_bitlinear() -> None:
-    """Unregister both bitlinear hooks (back to the pure-jnp fallbacks)."""
-    global _BITLINEAR_IMPL, _BITLINEAR_FUSED_IMPL
+    """Unregister every bitlinear hook (back to the pure-jnp fallbacks)."""
+    global _BITLINEAR_IMPL, _BITLINEAR_FUSED_IMPL, _BITLINEAR_GROUPED_IMPL
     _BITLINEAR_IMPL = None
     _BITLINEAR_FUSED_IMPL = None
+    _BITLINEAR_GROUPED_IMPL = None
 
 
 def has_fused_bitlinear() -> bool:
     return _BITLINEAR_FUSED_IMPL is not None
 
 
+def has_grouped_bitlinear() -> bool:
+    return _BITLINEAR_GROUPED_IMPL is not None
+
+
 def is_compressed(w) -> bool:
     return isinstance(w, dict) and _KEYS.issubset(w.keys())
+
+
+def is_grouped(w) -> bool:
+    """Compressed weight with a leading group (expert) axis: the scan-sliced
+    MoE stack layout, C (E, r, c, K, td)."""
+    return is_compressed(w) and w["C"].ndim == 5
 
 
 def _unpack(m_packed: jax.Array, K: int, dtype) -> jax.Array:
@@ -108,12 +141,21 @@ def _unpack(m_packed: jax.Array, K: int, dtype) -> jax.Array:
 
 
 def decompress(w: dict, dtype=None) -> jax.Array:
-    """Materialise W_hat = M C (for tests / tiny layers)."""
+    """Materialise W_hat = M C (for tests / tiny layers).  Leading stack
+    dims (grouped expert weights, scan-stacked layers) are preserved:
+    (..., r, c, K, td) decompresses to (..., r*tn, c*td)."""
     C = w["C"]
+    mp = w["m_packed"]
     dtype = dtype or C.dtype
+    if C.ndim > 4:
+        lead = C.shape[:-4]
+        flat = jax.vmap(lambda m, c: decompress({"m_packed": m, "C": c}, dtype))(
+            mp.reshape(-1, *mp.shape[-4:]), C.reshape(-1, *C.shape[-4:])
+        )
+        return flat.reshape(*lead, *flat.shape[-2:])
     r, c, K, td = C.shape
-    tn = w["m_packed"].shape[2]
-    M = _unpack(w["m_packed"], K, dtype)                    # (r, c, tn, K)
+    tn = mp.shape[2]
+    M = _unpack(mp, K, dtype)                               # (r, c, tn, K)
     tiles = jnp.einsum("rcnk,rckd->rcnd", M, C.astype(dtype))
     return tiles.transpose(0, 2, 1, 3).reshape(r * tn, c * td)
 
@@ -134,6 +176,22 @@ def apply_compressed_einsum(x: jax.Array, w: dict) -> jax.Array:
         z = jnp.einsum("...rn,rcnk->...rck", xt, M)
     y = jnp.einsum("...rck,rckd->...cd", z, C.astype(x.dtype))
     return y.reshape(*lead, c * td)
+
+
+def apply_compressed_grouped_einsum(x: jax.Array, w: dict) -> jax.Array:
+    """Grouped oracle: y_e = x_e @ W_hat_e per group slice via the
+    two-einsum form.  x (E, ..., d_in) with the leading axis matching the
+    weight's group (expert) axis — the MoE (E, B, C, d) dispatch layout."""
+    C = w["C"]
+    E, r, c, K, td = C.shape
+    tn = w["m_packed"].shape[3]
+    assert x.shape[0] == E, (x.shape, C.shape)
+    lead = x.shape[1:-1]
+    xt = x.reshape(E, -1, r, tn)
+    M = _unpack(w["m_packed"], K, x.dtype)                  # (E, r, c, tn, K)
+    z = jnp.einsum("etrn,ercnk->etrck", xt, M)
+    y = jnp.einsum("etrck,erckd->etcd", z, C.astype(x.dtype))
+    return y.reshape(E, *lead, c * td)
 
 
 @jax.custom_vjp
@@ -168,6 +226,48 @@ def _apply_fused_bwd(res, g):
 _apply_fused.defvjp(_apply_fused_fwd, _apply_fused_bwd)
 
 
+@jax.custom_vjp
+def _apply_grouped_fused(x: jax.Array, w: dict) -> jax.Array:
+    return _BITLINEAR_GROUPED_IMPL(x, w)
+
+
+def _apply_grouped_fused_fwd(x, w):
+    return _apply_grouped_fused(x, w), (x, w)
+
+
+def _apply_grouped_fused_bwd(res, g):
+    # Einsum-derived cotangents, exactly as the 2D fused path but with the
+    # group axis threaded through (grads wrt x and C exact; m_packed float0).
+    x, w = res
+    C = w["C"]
+    E, r, c, K, td = C.shape
+    tn = w["m_packed"].shape[3]
+    M = _unpack(w["m_packed"], K, x.dtype)                  # (E, r, c, tn, K)
+    xt = x.reshape(E, -1, r, tn)
+    gt = g.reshape(E, -1, c, td)
+    dz = jnp.einsum("etcd,erckd->etrck", gt, C.astype(x.dtype))
+    dx = jnp.einsum("etrck,ercnk->etrn", dz, M).reshape(x.shape)
+    z = jnp.einsum("etrn,ercnk->etrck", xt, M)
+    dC = jnp.einsum("etrck,etcd->erckd", z, gt).astype(C.dtype)
+    dmp = np.zeros(w["m_packed"].shape, dtype=jax.dtypes.float0)
+    return dx, {"m_packed": dmp, "C": dC}
+
+
+_apply_grouped_fused.defvjp(_apply_grouped_fused_fwd, _apply_grouped_fused_bwd)
+
+
+def apply_compressed_grouped(x: jax.Array, w: dict) -> jax.Array:
+    """Per-group-slice y_e = x_e @ W_hat_e without materialising any
+    W_hat_e.  With a grouped kernel registered
+    (``register_bitlinear_grouped``, wired by
+    ``repro.kernels.ops.enable_kernels``) all E slices run as one grouped
+    Pallas call (grid over experts); gradients stay exact via the
+    einsum-derived custom VJP."""
+    if _BITLINEAR_GROUPED_IMPL is not None:
+        return _apply_grouped_fused(x, w)
+    return apply_compressed_grouped_einsum(x, w)
+
+
 def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
     """y = x @ W_hat without materialising W_hat.
 
@@ -175,8 +275,12 @@ def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
     ``repro.kernels.ops.enable_kernels``) the whole layer runs as one
     y = (x @ M) @ C kernel call — no per-step unpack of M to dense ±1 —
     and gradients are still exact via the einsum-derived custom VJP.
+    Grouped (per-expert) weights — C with a leading group axis — dispatch
+    to the grouped path, where x's leading axis is the group axis.
     Dispatch is read at trace time: already-jitted callables keep the
     impl they were traced with."""
+    if is_grouped(w):
+        return apply_compressed_grouped(x, w)
     if _BITLINEAR_FUSED_IMPL is not None:
         return _apply_fused(x, w)
     return apply_compressed_einsum(x, w)
@@ -187,6 +291,10 @@ def compressed_num_bytes(w: dict) -> int:
 
 
 def dense_num_bytes(w: dict, dense_itemsize: int = 2) -> int:
-    r, c, K, td = w["C"].shape
-    tn = w["m_packed"].shape[2]
-    return r * tn * c * td * dense_itemsize
+    C = w["C"]
+    r, c, K, td = C.shape[-4:]
+    tn = w["m_packed"].shape[-2]
+    groups = 1
+    for s in C.shape[:-4]:
+        groups *= int(s)
+    return groups * r * tn * c * td * dense_itemsize

@@ -37,7 +37,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import _compat
 
-__all__ = ["bitlinear"]
+__all__ = ["bitlinear", "bitlinear_grouped"]
 
 # VMEM budget for the decode fast path (x block + all M/C tiles of one
 # output column + f32 accumulator); ~16 MB/core physical, stay well under.
@@ -55,22 +55,35 @@ def _unpack_bits(mp, K: int, dtype):
     return 2.0 * m.astype(dtype) - 1.0
 
 
-def _kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
-    r = pl.program_id(2)
-
+def _accumulate_block(x, mp, c, acc_ref, r, *, K: int):
+    """Shared r-step body of the grid schedules: unpack one M tile, run the
+    two MXU matmuls, accumulate into the f32 VMEM scratch."""
     @pl.when(r == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = x_ref[...]                       # (bt, tn)
-    mp = mp_ref[0, 0]                    # (tn, kb) uint8
-    c = c_ref[0, 0]                      # (K, td)
 
     m = _unpack_bits(mp, K, x.dtype)
     z = jnp.dot(x, m, preferred_element_type=jnp.float32)          # (bt, K)
     acc_ref[...] += jnp.dot(
         z.astype(c.dtype), c, preferred_element_type=jnp.float32
     )
+
+
+def _pad_rows(x, T: int, block_t: int):
+    """Pad the token axis (second-to-last) to a sublane-aligned block
+    multiple; returns (x, bt, Tp)."""
+    bt = min(block_t, -(-T // 8) * 8)
+    Tp = -(-T // bt) * bt
+    if Tp != T:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, Tp - T), (0, 0)]
+        x = jnp.pad(x, pad)
+    return x, bt, Tp
+
+
+def _kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
+    r = pl.program_id(2)
+    # x (bt, tn), mp (tn, kb) uint8, c (K, td)
+    _accumulate_block(x_ref[...], mp_ref[0, 0], c_ref[0, 0], acc_ref, r, K=K)
 
     @pl.when(r == n_r - 1)
     def _flush():
@@ -123,10 +136,7 @@ def bitlinear(
 
     # pad T up to a sublane-aligned block multiple (decode has T = batch,
     # e.g. 3 — previously a hard assert)
-    bt = min(block_t, -(-T // 8) * 8)
-    Tp = -(-T // bt) * bt
-    if Tp != T:
-        x = jnp.pad(x, ((0, Tp - T), (0, 0)))
+    x, bt, Tp = _pad_rows(x, T, block_t)
 
     use_decode = mode == "decode" or (
         mode == "auto"
@@ -170,3 +180,60 @@ def bitlinear(
         interpret=interpret,
     )(x, m_packed, C)
     return out[:T]
+
+
+def _grouped_kernel(x_ref, mp_ref, c_ref, o_ref, acc_ref, *, K: int, n_r: int):
+    r = pl.program_id(3)
+    # same body as _kernel behind the leading expert block dim of 1
+    _accumulate_block(x_ref[0], mp_ref[0, 0, 0], c_ref[0, 0, 0], acc_ref, r, K=K)
+
+    @pl.when(r == n_r - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def bitlinear_grouped(
+    x: jax.Array,        # (E, T, d_in) per-expert token blocks
+    m_packed: jax.Array, # (E, r, c, tn, kb) uint8
+    C: jax.Array,        # (E, r, c, K, td)
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Grouped fused bitlinear: y_e (T, d_out) = x_e @ decompress(M_e, C_e)
+    for every expert e in one kernel launch — the compressed form of the
+    MoE expert einsum ``ebcd,edf->ebcf`` after flattening (B, C) -> T.
+
+    The grid is (E, T/bt, c, r): an expert axis in front of the 2D kernel's
+    (T/bt, c, r) schedule, so each expert slice reuses the same block
+    schedule (f32 VMEM scratch accumulated over the r reduction) while M/C
+    bytes stream once per (e, c, r) block.  T is padded to a sublane-aligned
+    block multiple and sliced back, so ragged per-expert capacities (any
+    B*C, including 1) work; E may be anything >= 1.
+    """
+    E, T, d_in = x.shape
+    Em, n_r, n_c, tn, kb = m_packed.shape
+    Ec, _, _, K, td = C.shape
+    assert Em == E and Ec == E, (x.shape, m_packed.shape, C.shape)
+    assert n_r * tn == d_in, (m_packed.shape, x.shape)
+
+    x, bt, Tp = _pad_rows(x, T, block_t)
+
+    grid = (E, Tp // bt, n_c, n_r)
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, K=K, n_r=n_r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, tn), lambda e, t, c, r: (e, t, r)),
+            pl.BlockSpec((1, 1, 1, tn, kb), lambda e, t, c, r: (e, r, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, K, td), lambda e, t, c, r: (e, r, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, td), lambda e, t, c, r: (e, t, c)),
+        out_shape=jax.ShapeDtypeStruct((E, Tp, n_c * td), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, td), jnp.float32)],
+        compiler_params=_compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, m_packed, C)
+    return out[:, :T]

@@ -12,6 +12,7 @@ import jax
 
 from repro.core import quantized
 from repro.kernels.bitlinear import bitlinear as _bitlinear
+from repro.kernels.bitlinear import bitlinear_grouped as _bitlinear_grouped
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.sa_sweep import sa_sweep as _sa_sweep
 from repro.kernels.sa_sweep import sa_sweep_many as _sa_sweep_many
@@ -22,6 +23,7 @@ from repro.models import attention as attn_lib
 __all__ = [
     "default_interpret",
     "bitlinear",
+    "bitlinear_grouped",
     "flash_attention",
     "sa_sweep",
     "sa_sweep_many",
@@ -30,6 +32,7 @@ __all__ = [
     "enable_kernels",
     "disable_kernels",
     "apply_compressed_fused",
+    "apply_compressed_grouped_fused",
 ]
 
 
@@ -43,6 +46,14 @@ def bitlinear(x, m_packed, C, block_t: int = 128, interpret: bool | None = None,
         interpret = default_interpret()
     return _bitlinear(x, m_packed, C, block_t=block_t, interpret=interpret,
                       mode=mode)
+
+
+def bitlinear_grouped(x, m_packed, C, block_t: int = 128,
+                      interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _bitlinear_grouped(x, m_packed, C, block_t=block_t,
+                              interpret=interpret)
 
 
 def flash_attention(q, k, v, window: int = 0, interpret: bool | None = None, **kw):
@@ -106,8 +117,12 @@ def enable_kernels(interpret: bool | None = None) -> None:
     def _fused_bitlinear_adapter(x, w):
         return apply_compressed_fused(x, w, interpret=it)
 
+    def _grouped_bitlinear_adapter(x, w):
+        return apply_compressed_grouped_fused(x, w, interpret=it)
+
     attn_lib.register_flash(_flash_adapter)
     quantized.register_bitlinear_fused(_fused_bitlinear_adapter)
+    quantized.register_bitlinear_grouped(_grouped_bitlinear_adapter)
 
 
 def disable_kernels() -> None:
@@ -132,3 +147,20 @@ def apply_compressed_fused(x, w, block_t: int = 128,
     y = bitlinear(x.reshape(T, x.shape[-1]), w["m_packed"], C,
                   block_t=block_t, interpret=interpret, mode=mode)
     return y.reshape(*lead, n_c * td)
+
+
+def apply_compressed_grouped_fused(x, w, block_t: int = 128,
+                                   interpret: bool | None = None):
+    """Grouped fused compressed linear: y_e = (x_e @ M_e) @ C_e via the
+    grouped bitlinear kernel.  x (E, ..., d_in) -> (E, ..., d_out) with the
+    leading axis matching the weight's group (expert) axis; any inner lead
+    dims (the MoE (B, C) dispatch dims) flatten into the kernel's T axis."""
+    C = w["C"]
+    E, n_r, n_c, K, td = C.shape
+    lead = x.shape[1:-1]
+    T = 1
+    for d in lead:
+        T *= d
+    y = bitlinear_grouped(x.reshape(E, T, x.shape[-1]), w["m_packed"], C,
+                          block_t=block_t, interpret=interpret)
+    return y.reshape(E, *lead, n_c * td)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "bitlinear_ref",
+    "bitlinear_grouped_ref",
     "flash_attention_ref",
     "sa_sweep_ref",
     "sa_sweep_many_ref",
@@ -34,6 +35,14 @@ def bitlinear_ref(x: jax.Array, m_packed: jax.Array, C: jax.Array) -> jax.Array:
     z = jnp.einsum("trn,rcnk->trck", xt, M)
     y = jnp.einsum("trck,rckd->tcd", z, C.astype(jnp.float32))
     return y.reshape(x.shape[0], n_c * C.shape[3]).astype(x.dtype)
+
+
+def bitlinear_grouped_ref(
+    x: jax.Array, m_packed: jax.Array, C: jax.Array
+) -> jax.Array:
+    """y_e = (x_e @ M_e) @ C_e per group slice, dense reference.
+    x (E, T, d_in), m_packed (E, r, c, tn, kb), C (E, r, c, K, td)."""
+    return jax.vmap(bitlinear_ref)(x, m_packed, C)
 
 
 def flash_attention_ref(

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import quantized
 from repro.models import layers
 from repro.models.params import dense_init
 
@@ -44,6 +45,19 @@ def init_moe(key, cfg: ModelConfig, dtype) -> dict:
     if cfg.moe_shared_expert:
         p["shared"] = layers.init_mlp(k5, d, ff, dtype, cfg.use_bias)
     return p
+
+
+def _expert_linear(x: jax.Array, w) -> jax.Array:
+    """Per-expert linear over the (E, B, C, d_in) dispatch layout.
+
+    Dense expert stacks run the classic ``ebcd,edf->ebcf`` einsum;
+    integer-decomposition-compressed stacks ({"m_packed", "C"} with a
+    leading expert axis, as produced by ``repro.compression``) route through
+    ``quantized.apply_compressed`` — the grouped fused bitlinear kernel when
+    one is registered, the grouped two-einsum oracle otherwise."""
+    if quantized.is_compressed(w):
+        return quantized.apply_compressed(x, w)
+    return jnp.einsum("ebcd,edf->ebcf", x, w)
 
 
 def _route_block(cfg: ModelConfig) -> int:
@@ -94,9 +108,9 @@ def moe_block(h: jax.Array, p: dict, cfg: ModelConfig):
     gate_w = p["gate"].value if hasattr(p["gate"], "value") else p["gate"]
     up_w = p["up"].value if hasattr(p["up"], "value") else p["up"]
     down_w = p["down"].value if hasattr(p["down"], "value") else p["down"]
-    act = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin, gate_w))
-    act = act * jnp.einsum("ebcd,edf->ebcf", xin, up_w)
-    xout = jnp.einsum("ebcf,efd->ebcd", act, down_w)                  # (E,B,C,d)
+    act = jax.nn.silu(_expert_linear(xin, gate_w))
+    act = act * _expert_linear(xin, up_w)
+    xout = _expert_linear(act, down_w)                                # (E,B,C,d)
     out = jnp.einsum("bsec,ebcd->bsd", combine.astype(h.dtype), xout)
 
     if "shared" in p:

@@ -154,6 +154,13 @@ class Engine:
             self.artifact = art
             self.compression = {
                 "tensors": len(tensors),
+                # tensors that keep a group (expert) axis after the layer
+                # scan slices off the lead stack dim — these serve through
+                # the grouped fused kernel, the rest through the 2D one
+                "grouped_tensors": sum(
+                    1 for e in tensors.values()
+                    if len(e.get("group_dims", [])) >= 2
+                ),
                 "ratio": round(art.total_ratio, 3),
                 "methods": methods,
             }

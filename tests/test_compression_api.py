@@ -72,6 +72,63 @@ def test_plan_min_size_gates_on_slice_size():
     assert dict(plan.skipped)["experts/w"] == "below min_size"
 
 
+def test_plan_emits_distinct_skip_reasons():
+    """The skip report separates the three miss classes: a matrix the
+    policy never targeted, a targeted one below min_size, and a targeted
+    one with indivisible dims.  (MoE expert stacks used to fall silently
+    into the first class — now they are targets by default and the report
+    names whatever still misses.)"""
+    values = {
+        "blk": {
+            "proj": {"kernel": jax.random.normal(jax.random.PRNGKey(0), (64, 64))},
+            "tiny": {"w": jnp.zeros((8, 8))},
+            "odd": {"w": jnp.zeros((257, 64))},          # 257 prime, no divisor
+            "moe": {"gate": jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64))},
+        },
+    }
+    plan = comp.plan_compression(values, base_policy(min_size=1024))
+    skipped = dict(plan.skipped)
+    assert skipped["blk/proj/kernel"] == "not matched by policy"
+    assert skipped["blk/tiny/w"] == "below min_size"
+    assert skipped["blk/odd/w"].startswith("indivisible dims")
+    # the expert stack is a target: planned, not lumped into any miss bucket
+    assert [t.path for t in plan.tensors] == ["blk/moe/gate"]
+    assert plan.tensors[0].groups == 2
+
+
+def test_plan_covers_bfloat16_and_shape_structs():
+    """bfloat16 (the default model dtype — a void type to numpy) must plan,
+    including over ShapeDtypeStruct trees (the dry-run planning input)."""
+    pol = base_policy(min_size=1024)
+    for leaf in (jnp.zeros((64, 64), jnp.bfloat16),
+                 jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)):
+        plan = comp.plan_compression({"blk": {"wq": {"w": leaf}}}, pol)
+        assert [t.path for t in plan.tensors] == ["blk/wq/w"], plan.summary()
+        assert plan.tensors[0].dtype == "bfloat16"
+    # integer leaves stay silently outside the report universe
+    plan = comp.plan_compression(
+        {"idx": {"w": jnp.zeros((64, 64), jnp.int32)}}, pol
+    )
+    assert plan.tensors == () and plan.skipped == ()
+
+
+def test_policy_targets_are_policy_data():
+    """Targets serialise with the policy and scoping them changes
+    eligibility without touching code."""
+    pol = base_policy(targets=(r"/w$",))
+    assert not pol.matches_target("blk/moe/gate")
+    assert comp.CompressionPolicy.from_json(pol.to_json()) == pol
+    values = {"moe": {"gate": jax.random.normal(jax.random.PRNGKey(0), (2, 64, 64))}}
+    plan = comp.plan_compression(values, pol)
+    assert plan.tensors == ()
+    assert dict(plan.skipped)["moe/gate"] == "not matched by policy"
+    # default policy targets expert stacks
+    plan2 = comp.plan_compression(values, base_policy(min_size=1024))
+    assert [t.path for t in plan2.tensors] == ["moe/gate"]
+    with pytest.raises(Exception):
+        comp.CompressionPolicy(targets=("[unclosed",))
+
+
 def test_plan_reports_chosen_tile_for_awkward_dims():
     values = {"odd": {"w": jax.random.normal(jax.random.PRNGKey(0), (48, 96))}}
     plan = comp.plan_compression(values, base_policy(tile_n=32, tile_d=64))
