@@ -1,0 +1,138 @@
+"""Autotune benchmark: rate-distortion curves per allocator engine.
+
+For each reduced arch, probe the per-tensor RD curves once, then sweep a
+grid of byte budgets (fractions of the uniform-policy plan's compressed
+bytes) through BOTH allocator engines (greedy water-filling and the
+``solve_many``-QUBO).  Each row records the budget, the bytes the
+allocation actually uses (must never exceed the budget — the regression
+gate turns that into a CI contract), the predicted total distortion at
+that budget (the RD curve) and the allocator solve time.
+
+granite-moe is in the arch set on purpose: its MoE expert stacks must be
+allocated *per-tensor* (one setting for the whole (L, E, d, ff) stack),
+exercising the grouped planning path end to end.
+
+    PYTHONPATH=src python -m benchmarks.autotune_bench [--fast]
+
+Writes BENCH_autotune.json at the repo root (CI keeps it fresh in fast
+mode; benchmarks/check_regression.py gates solve time and feasibility).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.compression import CompressionPolicy, allocate_budget, plan_compression
+from repro.compression.autotune import probe_tensors
+from repro.configs import get_config, reduced_for_smoke
+from repro.models import init_model
+from repro.models.params import split
+
+ARCHS = ("qwen3-32b", "granite-moe-1b-a400m")
+ENGINES = ("greedy", "qubo")
+# The budget grid is identical in fast and full mode so the per-PR fast run
+# covers every committed baseline row (the regression gate fails on missing
+# rows); --fast only shrinks the probe subsample.
+BUDGET_FRACS = (0.55, 0.7, 0.85, 1.0)
+
+
+def _policy() -> CompressionPolicy:
+    # mirrors the CI MoE plan/execute smoke scale: every reduced arch plans
+    # ~5 tensors including granite's three expert stacks
+    return CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+
+
+def bench_autotune_suite(fast: bool = False, out_path: str | None = None) -> dict:
+    fracs = BUDGET_FRACS
+    max_probe_tiles = 8 if fast else 32
+    results = []
+    for arch in ARCHS:
+        cfg = reduced_for_smoke(get_config(arch))
+        values, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+        policy = _policy()
+        plan = plan_compression(values, policy)
+        uniform_bytes = plan.total_bytes()
+
+        t0 = time.perf_counter()
+        probes = probe_tensors(
+            values, plan, key=jax.random.PRNGKey(0),
+            max_probe_tiles=max_probe_tiles,
+        )
+        probe_s = time.perf_counter() - t0
+        # MoE expert stacks specifically (granite's gate/up/down), not every
+        # layer-stacked tensor — the field exists to confirm experts are
+        # allocated per-tensor, so it must be 0 on non-MoE archs
+        expert_tensors = sum(1 for t in plan.tensors if "/moe/" in t.path)
+
+        for frac in fracs:
+            budget = int(frac * uniform_bytes)
+            for engine in ENGINES:
+                # best-of-2 solve time: shared CI runners are noisy, and
+                # the first QUBO call pays the solve_many jit compile
+                alloc, solve_s = None, float("inf")
+                for _ in range(2):
+                    a = allocate_budget(
+                        probes, budget, engine=engine,
+                        key=jax.random.PRNGKey(1),
+                    )
+                    alloc, solve_s = a, min(solve_s, a.solve_s)
+                dense = sum(1 for pt in alloc.choices.values() if pt.dense)
+                results.append({
+                    "arch": arch,
+                    "engine": engine,
+                    "budget_frac": frac,
+                    "budget_bytes": budget,
+                    "achieved_bytes": alloc.total_bytes,
+                    "pred_distortion": alloc.total_distortion,
+                    "solve_s": solve_s,
+                    "probe_s": probe_s,
+                    "tensors": len(probes),
+                    "expert_stack_tensors": expert_tensors,
+                    "dense_choices": dense,
+                })
+                print(
+                    f"{arch:24s} {engine:6s} frac={frac:.2f}: "
+                    f"{alloc.total_bytes}/{budget} B, "
+                    f"distortion {alloc.total_distortion:9.2f}, "
+                    f"solve {solve_s * 1e3:7.2f} ms"
+                )
+
+    out = {
+        "suite": "autotune",
+        "device": jax.default_backend(),
+        "config": "reduced",
+        "fast": fast,
+        "max_probe_tiles": max_probe_tiles,
+        "results": results,
+    }
+    if out_path is None:
+        out_path = os.path.join(
+            os.path.dirname(__file__), "..", "BENCH_autotune.json"
+        )
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller probe subsample, same budget grid so the "
+                         "per-PR rows cover every committed baseline row "
+                         "(the per-PR CI step)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out = bench_autotune_suite(fast=args.fast, out_path=args.out)
+    print(f"wrote BENCH_autotune.json ({len(out['results'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,15 @@ tolerance band:
             decode tok/s,
   ising     per (solver, n, problems) row: jnp / pallas spin-updates/s,
   compress  per (method, max_pool_tiles) row: pooled tiles/s
-            (total_tiles / pooled_s — the batched-solve throughput).
+            (total_tiles / pooled_s — the batched-solve throughput),
+  autotune  per (arch, engine, budget_frac) row: allocator solves/s
+            (solve time floored at 50 ms — greedy solves in microseconds
+            and the QUBO anneal in ~15 ms, scales where scheduler jitter
+            dwarfs the band; the gate exists to catch order-of-magnitude
+            allocator regressions) and budget feasibility
+            (achieved_bytes <= budget_bytes must stay 1.0 — an
+            allocation over budget is a correctness regression, not a
+            slowdown).
 
 Comparisons only run on *comparable* configs: a file whose ``device`` or
 ``pallas_mode`` differs from the baseline's (e.g. a TPU-produced baseline
@@ -58,6 +66,18 @@ SUITES = {
         "metrics": (),
         "derived": {
             "pooled_tiles_per_s": lambda r: r["total_tiles"] / r["pooled_s"],
+        },
+    },
+    "BENCH_autotune.json": {
+        "suite": "autotune",
+        "comparable": ("device",),
+        "key": ("arch", "engine", "budget_frac"),
+        "metrics": (),
+        "derived": {
+            "alloc_solves_per_s": lambda r: 1.0 / max(r["solve_s"], 5e-2),
+            "budget_feasible": lambda r: (
+                1.0 if r["achieved_bytes"] <= r["budget_bytes"] else 0.0
+            ),
         },
     },
 }

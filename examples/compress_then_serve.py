@@ -79,6 +79,8 @@ def main():
     )
     plan = plan_compression(state.params, policy)
     print(plan.summary())
+    print(f"planned: {plan.total_bytes() / 2**20:.2f} MiB compressed "
+          f"(predicted x{plan.compression_ratio:.2f})")
 
     # 3. execute: tiles pooled across tensors into batched solves.
     # max_pool_tiles=128 is the CPU sweet spot (BENCH_compress.json): every
@@ -87,7 +89,8 @@ def main():
                                    key=jax.random.PRNGKey(0),
                                    max_pool_tiles=128)
     print(f"compressed {len(artifact.report.compressed)} tensors with "
-          f"'{args.method}': ratio x{artifact.total_ratio:.2f}")
+          f"'{args.method}': {artifact.total_bytes() / 2**20:.2f} MiB "
+          f"(x{artifact.compression_ratio:.2f})")
     for pth, ob, nb, err in artifact.report.compressed[:6]:
         print(f"  {pth:40s} rel_err={err:.3f}")
 

@@ -13,11 +13,27 @@ Three stages replace the one-shot ``compress_params`` walk:
 
 ``repro.core.compress.compress_params`` remains as a thin back-compat
 wrapper (CompressionConfig -> one-rule policy -> plan -> execute).
+
+A fourth, optional stage sits on top: the **rate-distortion autotuner**
+(:mod:`repro.compression.autotune`, docs/autotune.md) probes per-tensor RD
+curves with trial compressions and allocates a global byte budget across
+tensors (greedy water-filling or a QUBO solved on the in-repo Ising
+stack) — ``plan_compression(values, policy, budget_bytes=...)`` returns the
+refined plan.
 """
 
 from repro.compression.artifact import (
     MANIFEST_NAME,
     CompressionArtifact,
+)
+from repro.compression.autotune import (
+    Allocation,
+    AutotuneResult,
+    BudgetInfeasibleError,
+    allocate_budget,
+    autotune_plan,
+    calibration_weights,
+    probe_tensors,
 )
 from repro.compression.execute import execute_plan
 from repro.compression.plan import (
@@ -41,4 +57,11 @@ __all__ = [
     "execute_plan",
     "CompressionArtifact",
     "MANIFEST_NAME",
+    "Allocation",
+    "AutotuneResult",
+    "BudgetInfeasibleError",
+    "allocate_budget",
+    "autotune_plan",
+    "calibration_weights",
+    "probe_tensors",
 ]

@@ -62,6 +62,15 @@ class CompressionArtifact:
     def total_ratio(self) -> float:
         return self.manifest["totals"]["ratio"]
 
+    def total_bytes(self) -> int:
+        """Stored bytes of the compressed tensors — the quantity an
+        autotune budget (``manifest["autotune"]["budget_bytes"]``) bounds."""
+        return int(self.manifest["totals"]["new_bytes"])
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.total_ratio
+
     def solver_batches(self) -> list:
         """Actual pooled ``solve_many`` batch sizes, one entry per BBO
         chunk (the final chunk of a pool may be smaller than the bound)."""
@@ -146,6 +155,7 @@ class CompressionArtifact:
             "policy": plan.policy.to_dict(),
             "solver_backend": plan.policy.solver_backend,
             "predicted_only": True,
+            **({"autotune": plan.autotune} if plan.autotune else {}),
             "tensors": tensors,
             "skipped": {p: r for p, r in plan.skipped},
             "pools": [],

@@ -1,0 +1,59 @@
+"""Rate-distortion autotuner: compress to a byte budget (docs/autotune.md).
+
+Turns "compress with these settings" into "compress to this budget":
+
+  1. **probe**     — trial-compress a deterministic tile subsample per
+     tensor over a (K, tile) candidate grid, reusing the pooled execute
+     path, to fit per-tensor rate-distortion curves
+     (:func:`probe_tensors`), optionally weighted by calibration
+     sensitivity (:func:`calibration_weights`).
+  2. **allocate**  — minimise total predicted distortion under a global
+     compressed-bytes budget (:func:`allocate_budget`) with two
+     cross-checked engines: Lagrangian/greedy water-filling and a QUBO
+     one-hot encoding solved through the in-repo batched Ising stack
+     (``ising.solve_many``).
+  3. **refine**    — emit the allocation as exact-path policy rules, re-plan,
+     and attach the autotune metadata the manifest/serving layers surface
+     (:func:`autotune_plan`).
+
+Entry points: ``plan_compression(values, policy, budget_bytes=...)``,
+``repro.launch.compress --budget-mb``, ``benchmarks/autotune_bench.py``.
+"""
+
+from repro.compression.autotune.allocate import (
+    Allocation,
+    BudgetInfeasibleError,
+    allocate_budget,
+    lower_hull,
+)
+from repro.compression.autotune.calibrate import (
+    calibration_inputs,
+    calibration_weights,
+)
+from repro.compression.autotune.probe import (
+    ProbeResult,
+    RDPoint,
+    candidate_settings,
+    probe_tensors,
+)
+from repro.compression.autotune.refine import (
+    AutotuneResult,
+    allocation_rules,
+    autotune_plan,
+)
+
+__all__ = [
+    "RDPoint",
+    "ProbeResult",
+    "candidate_settings",
+    "probe_tensors",
+    "calibration_inputs",
+    "calibration_weights",
+    "Allocation",
+    "BudgetInfeasibleError",
+    "allocate_budget",
+    "lower_hull",
+    "AutotuneResult",
+    "allocation_rules",
+    "autotune_plan",
+]

@@ -1,0 +1,327 @@
+"""Budget allocation: minimum total distortion under a compressed-bytes cap.
+
+Given per-tensor rate-distortion curves (:mod:`.probe`), choose one setting
+per tensor minimising predicted total distortion subject to
+``sum(bytes) <= budget_bytes``.  Two interchangeable engines, cross-checked
+by tests and the autotune benchmark:
+
+``greedy``
+    Lagrangian water-filling on the per-tensor lower convex hulls: start
+    every tensor at its cheapest point, then apply hull upgrades in
+    decreasing distortion-reduction-per-byte order while they fit.  This is
+    the classical optimal scheme for the continuous relaxation and the
+    fast, deterministic baseline.
+
+``qubo``
+    The allocation problem itself is Ising-shaped (Okamoto 2025): one-hot
+    choice bits per tensor, a quadratic one-hot penalty, and a budget
+    penalty with binary-fraction slack bits turn it into a QUBO, solved by
+    the in-repo batched annealer — ONE ``ising.solve_many`` call whose
+    problem axis is a grid of penalty weights (each (A, B) combo is an
+    independent Ising instance).  Decoded solutions are repaired to
+    feasibility (downgrade along the hull while over budget), and the best
+    feasible decode wins.  See docs/autotune.md for the exact encoding.
+
+Both engines raise :class:`BudgetInfeasibleError` when even the cheapest
+settings exceed the budget, and never return an allocation over budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Allocation",
+    "BudgetInfeasibleError",
+    "allocate_budget",
+    "lower_hull",
+]
+
+# Penalty-weight grid for the QUBO engine: each (one_hot A, budget B) combo
+# becomes one problem of the batched solve.  Distortions are normalised to
+# [0, 1] per instance, byte loads to fractions of the budget headroom, so
+# the same grid works across instances.
+_PENALTY_GRID = tuple(
+    (a, b) for a in (2.0, 6.0) for b in (1.0, 4.0, 16.0)
+)
+_SLACK_BITS = 6
+
+
+class BudgetInfeasibleError(ValueError):
+    """Budget below the cheapest feasible allocation."""
+
+    def __init__(self, budget_bytes: int, min_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self.min_bytes = int(min_bytes)
+        super().__init__(
+            f"budget of {budget_bytes} bytes is infeasible: the cheapest "
+            f"allocation needs {min_bytes} bytes "
+            f"({min_bytes / 2**20:.2f} MiB)"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """The allocator's verdict: one chosen RDPoint per tensor path."""
+
+    choices: dict          # path -> RDPoint
+    budget_bytes: int
+    total_bytes: int
+    total_distortion: float
+    engine: str
+    solve_s: float         # allocator solve wall-clock (QUBO: the anneal)
+
+    def to_dict(self) -> dict:
+        return {
+            "budget_bytes": self.budget_bytes,
+            "total_bytes": self.total_bytes,
+            "total_distortion": self.total_distortion,
+            "engine": self.engine,
+            "solve_s": self.solve_s,
+            "choices": {
+                path: pt.to_dict() for path, pt in sorted(self.choices.items())
+            },
+        }
+
+
+def _pareto(points) -> list:
+    """Ascending bytes, strictly decreasing distortion (dominated points
+    dropped).  The cheapest point always survives."""
+    pts = sorted(points, key=lambda p: (p.bytes, p.distortion))
+    out = []
+    for p in pts:
+        if out and p.distortion >= out[-1].distortion - 1e-12:
+            continue
+        out.append(p)
+    return out
+
+
+def lower_hull(points) -> list:
+    """Lower convex hull of a pareto-filtered RD curve: the slopes
+    (distortion drop per extra byte) are strictly decreasing along it,
+    which is what makes greedy marginal-utility upgrades optimal for the
+    continuous relaxation."""
+    pts = _pareto(points)
+    hull: list = []
+    for p in pts:
+        while len(hull) >= 2:
+            a, b = hull[-2], hull[-1]
+            # keep b only if slope(a->b) > slope(b->p)
+            lhs = (a.distortion - b.distortion) * (p.bytes - b.bytes)
+            rhs = (b.distortion - p.distortion) * (b.bytes - a.bytes)
+            if lhs <= rhs:
+                hull.pop()
+            else:
+                break
+        hull.append(p)
+    return hull
+
+
+def _check_feasible(hulls: dict, budget_bytes: int) -> int:
+    base = sum(h[0].bytes for h in hulls.values())
+    if base > budget_bytes:
+        raise BudgetInfeasibleError(budget_bytes, base)
+    return base
+
+
+def _totals(hulls: dict, choice: dict):
+    b = sum(hulls[p][j].bytes for p, j in choice.items())
+    d = sum(hulls[p][j].distortion for p, j in choice.items())
+    return int(b), float(d)
+
+
+def _edges(hulls: dict) -> list:
+    """All hull upgrade edges, best slope first (ties broken by path/index
+    for determinism).  Per tensor the hull guarantees decreasing slopes, so
+    this global order preserves each tensor's upgrade order."""
+    edges = []
+    for path, h in hulls.items():
+        for j in range(len(h) - 1):
+            cost = h[j + 1].bytes - h[j].bytes
+            gain = h[j].distortion - h[j + 1].distortion
+            edges.append((gain / max(cost, 1), path, j, cost))
+    edges.sort(key=lambda e: (-e[0], e[1], e[2]))
+    return edges
+
+
+def _greedy(hulls: dict, budget_bytes: int):
+    spent = _check_feasible(hulls, budget_bytes)
+    choice = {path: 0 for path in hulls}
+    for _, path, j, cost in _edges(hulls):
+        if choice[path] != j:          # prerequisite upgrade was skipped
+            continue
+        if spent + cost <= budget_bytes:
+            choice[path] = j + 1
+            spent += cost
+    return choice
+
+
+def _repair(hulls: dict, choice: dict, budget_bytes: int) -> dict:
+    """Downgrade along the hulls (cheapest distortion increase per byte
+    saved first) until the allocation fits the budget.  Terminates because
+    the all-cheapest allocation is feasible."""
+    choice = dict(choice)
+    spent, _ = _totals(hulls, choice)
+    while spent > budget_bytes:
+        best = None
+        for path, j in choice.items():
+            if j == 0:
+                continue
+            h = hulls[path]
+            saved = h[j].bytes - h[j - 1].bytes
+            cost = h[j - 1].distortion - h[j].distortion
+            rate = cost / max(saved, 1)
+            if best is None or rate < best[0]:
+                best = (rate, path, saved)
+        _, path, saved = best
+        choice[path] -= 1
+        spent -= saved
+    return choice
+
+
+def _qubo_ising(hulls: dict, budget_bytes: int, base_bytes: int):
+    """Build the batched Ising encoding of the allocation QUBO.
+
+    Variables: one choice bit per (tensor, hull point) — including index 0,
+    so the one-hot penalty is uniform — plus ``_SLACK_BITS`` binary-fraction
+    slack bits for the inequality budget.  Byte loads are normalised to the
+    budget headroom ``R = budget - sum(cheapest)``; per-tensor distortions
+    are shifted to 0 at their best point and scaled by the global spread.
+    Returns (h (P, n), B (P, n, n), var_index) for the penalty grid.
+    """
+    paths = sorted(hulls)
+    R = budget_bytes - base_bytes
+    var_index = []             # (path, hull_idx) per choice variable
+    rho, dtil = [], []
+    spread = max(
+        (h[0].distortion - h[-1].distortion) for h in hulls.values()
+    ) or 1.0
+    for path in paths:
+        h = hulls[path]
+        for j, pt in enumerate(h):
+            extra = pt.bytes - h[0].bytes
+            if extra > R:      # cannot fit even alone: prune
+                continue
+            var_index.append((path, j))
+            rho.append(extra / max(R, 1))
+            dtil.append((pt.distortion - h[-1].distortion) / spread)
+    nc = len(var_index)
+    slack = [2.0 ** -(b + 1) for b in range(_SLACK_BITS)]
+    n = nc + _SLACK_BITS
+    load = np.array(rho + slack, dtype=np.float64)     # budget coefficients
+
+    hs, Bs = [], []
+    for A, Bp in _PENALTY_GRID:
+        q = np.zeros(n)
+        Q = np.zeros((n, n))                           # symmetric, zero diag
+        # objective
+        q[:nc] += np.array(dtil)
+        # one-hot penalty per tensor: A * (sum_j x_ij - 1)^2
+        by_path: dict = {}
+        for v, (path, _) in enumerate(var_index):
+            by_path.setdefault(path, []).append(v)
+        for vs in by_path.values():
+            for v in vs:
+                q[v] += -A                              # x^2 = x -> A - 2A
+            for i, u in enumerate(vs):
+                for v in vs[i + 1:]:
+                    Q[u, v] += A
+                    Q[v, u] += A
+        # budget penalty: B * (sum_v load_v x_v - 1)^2
+        q += Bp * load * (load - 2.0)
+        outer = Bp * np.outer(load, load)
+        np.fill_diagonal(outer, 0.0)
+        Q += outer
+        # QUBO -> Ising via x = (1 + s) / 2  (constants dropped)
+        h_i = q / 2.0 + Q.sum(axis=1) / 2.0
+        B_i = Q / 4.0
+        hs.append(h_i)
+        Bs.append(B_i)
+    return (
+        jnp.asarray(np.stack(hs), jnp.float32),
+        jnp.asarray(np.stack(Bs), jnp.float32),
+        var_index,
+    )
+
+
+def _decode(x_row: np.ndarray, var_index: list, hulls: dict) -> dict:
+    """Ising spins -> per-tensor hull choice.  Multiple/zero set bits per
+    tensor fall back to the cheapest implicated/first point — the repair
+    pass then enforces the budget."""
+    picked: dict = {}
+    for v, (path, j) in enumerate(var_index):
+        if x_row[v] > 0:
+            picked.setdefault(path, []).append(j)
+    return {
+        path: (min(picked[path]) if path in picked else 0) for path in hulls
+    }
+
+
+def _qubo(hulls: dict, budget_bytes: int, *, key, backend, num_sweeps,
+          num_reads):
+    from repro.core import ising
+
+    base = _check_feasible(hulls, budget_bytes)
+    if budget_bytes - base <= 0 or all(len(h) == 1 for h in hulls.values()):
+        return {path: 0 for path in hulls}, 0.0
+    h, B, var_index = _qubo_ising(hulls, budget_bytes, base)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    xs, _ = ising.solve_many(
+        "sa", key, ising.IsingProblem(h, B),
+        num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
+    )
+    xs = np.asarray(jax.block_until_ready(xs))
+    solve_s = time.perf_counter() - t0
+
+    best = None
+    for row in xs:
+        choice = _repair(hulls, _decode(row, var_index, hulls), budget_bytes)
+        b, d = _totals(hulls, choice)
+        if best is None or (d, b) < (best[1], best[2]):
+            best = (choice, d, b)
+    return best[0], solve_s
+
+
+def allocate_budget(
+    probes,
+    budget_bytes: int,
+    *,
+    engine: str = "greedy",
+    key=None,
+    backend: str = "auto",
+    num_sweeps: int = 96,
+    num_reads: int = 8,
+) -> Allocation:
+    """Choose one RD point per probed tensor under the byte budget.
+
+    ``probes`` is a list of :class:`ProbeResult` (or anything exposing
+    ``path`` and ``points``); ``engine`` is "greedy" or "qubo".  Raises
+    :class:`BudgetInfeasibleError` when no allocation fits."""
+    if engine not in ("greedy", "qubo"):
+        raise ValueError(f"unknown allocator engine {engine!r} (greedy|qubo)")
+    hulls = {p.path: lower_hull(p.points) for p in probes}
+    if engine == "greedy":
+        t0 = time.perf_counter()
+        choice = _greedy(hulls, budget_bytes)
+        solve_s = time.perf_counter() - t0
+    else:
+        choice, solve_s = _qubo(
+            hulls, budget_bytes, key=key, backend=backend,
+            num_sweeps=num_sweeps, num_reads=num_reads,
+        )
+    total_b, total_d = _totals(hulls, choice)
+    return Allocation(
+        choices={path: hulls[path][j] for path, j in choice.items()},
+        budget_bytes=int(budget_bytes),
+        total_bytes=total_b,
+        total_distortion=total_d,
+        engine=engine,
+        solve_s=float(solve_s),
+    )

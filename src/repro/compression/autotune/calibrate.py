@@ -1,0 +1,78 @@
+"""Calibration mode: weight distortion by what the model actually computes.
+
+Unweighted probing treats a unit of squared weight error the same in every
+tensor, but the serving-time damage of compressing W depends on the
+activations that flow through it: for ``y = x @ W`` the first-order output
+error of a weight perturbation dW is ``x @ dW``, so tensor distortion
+should be weighted by the second moments of the calibration activations
+(and of the backpropagated signal downstream of the layer).
+
+We capture both factors in one backward pass.  A calibration batch is
+drawn through the model *frontends* (token ids for LM archs, stub
+frame/patch embeddings for the audio/vlm archs), pushed through
+``models.forward``, and the gradient of the logit energy
+``0.5 * mean(logits^2)`` is taken with respect to every parameter.  For a
+linear layer the gradient is ``x^T delta`` — its per-element second moment
+factorises into (input activation second moments) x (downstream signal
+second moments) — exactly the sensitivity a distortion-minimising
+allocator wants.  Per-tensor weights are the mean squared gradient,
+normalised to mean 1.0 over the eligible tensors so uncalibrated and
+calibrated runs are byte-comparable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["calibration_inputs", "calibration_weights"]
+
+
+def calibration_inputs(cfg, *, batch: int = 4, seq_len: int = 32, key=None):
+    """A calibration batch in the model's native input modality, via the
+    frontends: ``{"tokens"}`` for LM archs, ``{"embeds"}`` (stub EnCodec
+    frames / InternViT patches) for audio/vlm."""
+    from repro.models.frontends import needs_embeds, stub_embeddings
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if needs_embeds(cfg):
+        return {"embeds": stub_embeddings(key, cfg, batch, seq_len)}
+    tokens = jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size)
+    return {"tokens": tokens}
+
+
+def calibration_weights(
+    values,
+    cfg,
+    inputs: dict | None = None,
+    *,
+    key=None,
+    eligible: tuple | None = None,
+) -> dict:
+    """Per-tensor sensitivity weights from one calibration forward/backward.
+
+    Returns ``{path: weight}`` for every float leaf of ``values``,
+    normalised to mean 1.0 over ``eligible`` paths (or over all paths when
+    not given).  Deterministic per (values, cfg, inputs/key).
+    """
+    from repro.compression.plan import tree_paths
+    from repro.models import forward
+
+    if inputs is None:
+        inputs = calibration_inputs(cfg, key=key)
+
+    def energy(vals):
+        logits, _, _ = forward(vals, inputs, cfg)
+        return 0.5 * jnp.mean(jnp.square(logits.astype(jnp.float32)))
+
+    grads = jax.grad(energy)(values)
+    raw = {
+        path: float(jnp.mean(jnp.square(g.astype(jnp.float32))))
+        for path, g in tree_paths(grads)
+    }
+    norm_paths = [p for p in (eligible or raw) if p in raw]
+    mean_w = sum(raw[p] for p in norm_paths) / max(len(norm_paths), 1)
+    if mean_w <= 0.0:
+        return {p: 1.0 for p in raw}
+    return {p: w / mean_w for p, w in raw.items()}

@@ -1,0 +1,271 @@
+"""Distortion probing: fit per-tensor rate-distortion curves cheaply.
+
+For every tensor in a base :class:`CompressionPlan`, trial-compress a
+deterministic subsample of its tiles over a candidate grid of ``(K, tile)``
+settings and estimate the tensor's full-tensor distortion (sum of squared
+reconstruction residuals, optionally weighted by calibration sensitivity)
+at each setting's predicted byte cost.  The resulting
+:class:`ProbeResult` curves are what the budget allocator
+(:mod:`repro.compression.autotune.allocate`) optimises over.
+
+Probing dogfoods the execute stage: candidate trials reuse the pooled
+``compress_tile_batch`` path — all tensors' sampled tiles that share a
+candidate geometry run as ONE batched solve — and per-tile PRNG keys are
+derived with the exact same ``fold_in(leaf_index) -> per-slice fold ->
+split-over-tiles`` chain ``execute_plan`` uses.  Probing *all* tiles of a
+tensor with the greedy/alternating methods therefore reproduces the final
+execution bit-for-bit: predicted distortion equals measured distortion
+(tests/test_autotune.py locks this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.execute import _tensor_keys, _tensor_tiles
+from repro.compression.plan import CompressionPlan, TensorPlan, tree_paths
+from repro.core.compress import compress_tile_batch
+
+__all__ = [
+    "RDPoint",
+    "ProbeResult",
+    "candidate_settings",
+    "probe_tensors",
+    "DEFAULT_K_FRACTIONS",
+]
+
+# K / tile_n grid probed per tensor.  The fractions bracket the uniform
+# default rank ratios in use (0.125 .. 0.75); K values collapse onto the
+# same integer for small tiles and are deduplicated.
+DEFAULT_K_FRACTIONS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875)
+
+_PROBE_SALT = 0x70726F62  # "prob"
+
+
+@dataclasses.dataclass(frozen=True)
+class RDPoint:
+    """One point on a tensor's rate-distortion curve.  ``K == 0`` is the
+    *dense* point: the tensor stays uncompressed (``bytes == orig_bytes``,
+    zero distortion)."""
+
+    tile_n: int
+    tile_d: int
+    K: int
+    bytes: int
+    distortion: float
+
+    @property
+    def dense(self) -> bool:
+        return self.K == 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeResult:
+    """A tensor's probed RD curve: candidate points sorted by bytes, the
+    dense fallback included, distortions already calibration-weighted."""
+
+    path: str
+    orig_bytes: int
+    weight: float          # calibration weight (1.0 when uncalibrated)
+    points: tuple          # RDPoint, ascending bytes
+
+    @property
+    def min_bytes(self) -> int:
+        return min(p.bytes for p in self.points)
+
+
+def _candidate_plan(t: TensorPlan, tn: int, td: int, K: int) -> TensorPlan:
+    """``t`` re-geometried to a candidate setting (same path/leaf_index, so
+    per-tile key derivation matches what execute would use for it)."""
+    from repro.launch import costing  # lazy, as in plan.py: keep imports light
+
+    r, c = t.d_in // tn, t.d_out // td
+    itemsize = jnp.dtype(t.dtype).itemsize
+    return dataclasses.replace(
+        t,
+        tile_n=tn,
+        tile_d=td,
+        K=K,
+        num_tiles=t.groups * r * c,
+        pred_bytes=costing.compressed_weight_bytes(
+            t.d_in, t.d_out, tn, td, K, itemsize, groups=t.groups
+        ),
+    )
+
+
+def candidate_settings(
+    t: TensorPlan,
+    k_fractions: tuple = DEFAULT_K_FRACTIONS,
+    tile_d_choices: int = 1,
+) -> list:
+    """Candidate (tile_n, tile_d, K) settings for one tensor.
+
+    ``tile_n`` stays at the base plan's choice (for BBO tensors that is the
+    paper-scale 8..16-row tile the planner forces); the grid varies ``K``
+    over ``k_fractions`` of tile_n and optionally halves ``tile_d``
+    (``tile_d_choices=2``) — a finer C matrix trades bytes for accuracy the
+    same way a higher K does, but with a different slope."""
+    tds = [t.tile_d]
+    if tile_d_choices > 1 and t.tile_d % 2 == 0 and t.tile_d // 2 >= 4:
+        tds.append(t.tile_d // 2)
+    out, seen = [], set()
+    for td in tds:
+        for frac in k_fractions:
+            K = min(max(int(round(frac * t.tile_n)), 1), t.tile_n - 1)
+            if (t.tile_n, td, K) in seen:
+                continue
+            seen.add((t.tile_n, td, K))
+            out.append(_candidate_plan(t, t.tile_n, td, K))
+    return out
+
+
+def _probe_indices(key, t: TensorPlan, ct: TensorPlan, max_tiles: int | None):
+    """Deterministic tile subsample for one (tensor, tile geometry):
+    seeded by (leaf_index, tn, td) — NOT K — so every K candidate of a
+    geometry is measured on the *same* tile subset.  Comparing K values on
+    disjoint samples would let between-sample variance invert RD segments
+    that the pareto filter then silently drops; a common sample makes the
+    K-to-K distortion differences pure signal.  Re-probing with the same
+    key stays byte-identical regardless of candidate enumeration order."""
+    if not max_tiles or ct.num_tiles <= max_tiles:
+        return None
+    k = jax.random.fold_in(key, _PROBE_SALT)
+    for salt in (t.leaf_index, ct.tile_n, ct.tile_d):
+        k = jax.random.fold_in(k, salt)
+    return jnp.sort(
+        jax.random.choice(k, ct.num_tiles, (max_tiles,), replace=False)
+    )
+
+
+def probe_tensors(
+    values,
+    plan: CompressionPlan,
+    *,
+    key=None,
+    weights: dict | None = None,
+    max_probe_tiles: int | None = 16,
+    tile_d_choices: int = 1,
+    k_fractions: tuple = DEFAULT_K_FRACTIONS,
+    probe_bbo_iters: int | None = 8,
+    backend: str | None = None,
+    max_pool_tiles: int | None = 4096,
+    verbose: bool = False,
+) -> list:
+    """Probe every tensor of ``plan`` over its candidate grid.
+
+    Returns ``[ProbeResult]`` in plan order.  ``weights`` maps tensor path
+    to a calibration weight (missing paths weigh 1.0);
+    ``max_probe_tiles`` bounds the trial-compressed tiles per (tensor,
+    candidate) — ``None`` probes every tile, making greedy/alternating
+    predictions exact; ``probe_bbo_iters`` caps the BBO refinement budget
+    during trials (full-budget probing would cost as much as executing).
+    ``max_pool_tiles`` chunks each pooled solve exactly as ``execute_plan``
+    does — exact probing of a large model must not build the one giant
+    batch execute deliberately avoids (chunking never changes
+    greedy/alternating results; for BBO the chunk boundaries are part of
+    the deterministic seed story, as in execute)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    backend = backend or plan.policy.solver_backend
+    weights = weights or {}
+    leaves = dict(tree_paths(values))
+
+    # -- probe jobs, pooled across tensors by candidate geometry -----------
+    pools: dict = {}   # pool_key -> [(t, ct)]
+    curves: dict = {t.path: [] for t in plan.tensors}
+    for t in plan.tensors:
+        for ct in candidate_settings(t, k_fractions, tile_d_choices):
+            if probe_bbo_iters and ct.method == "bbo":
+                ct = dataclasses.replace(
+                    ct, bbo_iters=min(ct.bbo_iters, probe_bbo_iters)
+                )
+            pools.setdefault(ct.pool_key, []).append((t, ct))
+
+    # -- one pooled trial compression per candidate geometry ---------------
+    # Sampled tile stacks are cached per (tensor, tile geometry) — K does
+    # not change the tiling or the keys, so every K candidate reuses one
+    # sample instead of re-tiling the tensor per pool.  Under
+    # ``max_probe_tiles`` the cache is tiny; with exact probing (None) it
+    # holds about one float32 copy of the eligible tensors, never the
+    # whole K-grid at once.
+    probe_key = jax.random.fold_in(key, _PROBE_SALT)
+    geom_cache: dict = {}   # (path, tn, td) -> (tiles, keys, norms2)
+    for pidx, (pool_key, jobs) in enumerate(sorted(pools.items())):
+        tn, td, K, method, bbo_iters = pool_key
+        tiles_parts, keys_parts, norms_parts = [], [], []
+        for t, ct in jobs:
+            gk = (t.path, ct.tile_n, ct.tile_d)
+            if gk not in geom_cache:
+                tiles = _tensor_tiles(leaves[t.path], ct).astype(jnp.float32)
+                tile_keys = _tensor_keys(key, ct)
+                idx = _probe_indices(key, t, ct, max_probe_tiles)
+                if idx is not None:
+                    tiles, tile_keys = tiles[idx], tile_keys[idx]
+                geom_cache[gk] = (
+                    tiles, tile_keys, jnp.sum(tiles * tiles, axis=(1, 2))
+                )
+            tiles, tile_keys, norms2 = geom_cache[gk]
+            tiles_parts.append(tiles)
+            keys_parts.append(tile_keys)
+            norms_parts.append(norms2)
+        all_tiles = jnp.concatenate(tiles_parts)
+        all_keys = jnp.concatenate(keys_parts)
+        total = all_tiles.shape[0]
+        chunk = total if not max_pool_tiles else min(total, max_pool_tiles)
+        err_parts = []
+        for ci, start_ix in enumerate(range(0, total, chunk)):
+            _, _, e = compress_tile_batch(
+                all_tiles[start_ix:start_ix + chunk],
+                all_keys[start_ix:start_ix + chunk],
+                jax.random.fold_in(jax.random.fold_in(probe_key, pidx), ci),
+                K, method, bbo_iters=max(bbo_iters, 1), backend=backend,
+            )
+            err_parts.append(e)
+        errs = err_parts[0] if len(err_parts) == 1 else jnp.concatenate(err_parts)
+        if verbose:
+            print(
+                f"  probe {method} {tn}x{td} K={K}: {all_tiles.shape[0]} "
+                f"trial tiles from {len(jobs)} tensors"
+            )
+        start = 0
+        for (t, ct), norms2 in zip(jobs, norms_parts):
+            n = norms2.shape[0]
+            err = errs[start:start + n]
+            start += n
+            # err is sqrt(objective)/||W_t||: squared residual per tile is
+            # err^2 * ||W_t||^2; scale the sampled mean to the full tensor.
+            resid2 = jnp.mean(err.astype(jnp.float32) ** 2 * norms2)
+            w = float(weights.get(t.path, 1.0))
+            curves[t.path].append(
+                RDPoint(
+                    tile_n=ct.tile_n,
+                    tile_d=ct.tile_d,
+                    K=ct.K,
+                    bytes=int(ct.pred_bytes),
+                    distortion=float(resid2) * ct.num_tiles * w,
+                )
+            )
+
+    # -- RD curves: dense fallback + candidates, ascending bytes -----------
+    out = []
+    for t in plan.tensors:
+        pts = curves[t.path] + [
+            RDPoint(tile_n=0, tile_d=0, K=0, bytes=int(t.orig_bytes),
+                    distortion=0.0)
+        ]
+        pts.sort(key=lambda p: (p.bytes, p.distortion))
+        out.append(
+            ProbeResult(
+                path=t.path,
+                orig_bytes=t.orig_bytes,
+                weight=float(weights.get(t.path, 1.0)),
+                points=tuple(pts),
+            )
+        )
+    return out

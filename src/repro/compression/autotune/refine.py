@@ -1,0 +1,227 @@
+"""Plan integration: turn an allocation into policy rules and a refined plan.
+
+The allocator's per-tensor choices are emitted as exact-path
+:class:`CompressionRule` overrides *prepended* to the base policy (first
+match wins, so the allocation pins every probed tensor while unprobed paths
+keep the base behaviour), and the re-planned tree is verified to reproduce
+the allocation tensor-for-tensor.  The refined plan carries an ``autotune``
+metadata block (budget, engine, predicted distortion, per-tensor
+allocation) that ``execute_plan`` copies into the artifact manifest and
+``serving.engine.Engine`` surfaces via ``Engine.compression``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+
+import jax
+
+from repro.compression.plan import CompressionPlan, plan_compression
+from repro.compression.policy import CompressionPolicy, CompressionRule
+
+from repro.compression.autotune.allocate import Allocation, allocate_budget
+from repro.compression.autotune.calibrate import calibration_weights
+from repro.compression.autotune.probe import probe_tensors
+
+__all__ = ["AutotuneResult", "allocation_rules", "autotune_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    """Everything the autotuner decided: the refined plan (with ``autotune``
+    metadata attached), the rule-based policy that reproduces it, the raw
+    allocation and the probed RD curves."""
+
+    plan: CompressionPlan
+    policy: CompressionPolicy
+    allocation: Allocation
+    probes: tuple
+    weights: dict | None
+    probe_s: float = 0.0   # wall-clock diagnostics live here, NOT in the
+                           # plan metadata: plans are deterministic per key
+
+
+def allocation_rules(allocation: Allocation, base_plan: CompressionPlan) -> tuple:
+    """Exact-path rules realising the allocation: dense choices become
+    ``method="skip"``, compressed choices pin (tile_n, tile_d) and encode K
+    as ``rank_ratio = K / tile_n`` (exact under the planner's rounding).
+
+    The method (and BBO refinement budget) each tensor resolved to in the
+    *base* plan is pinned too — first-match-wins means an exact-path rule
+    shadows whatever base rule granted a tensor e.g. ``method="bbo"``, and
+    without re-stating it the tensor would silently revert to the policy
+    default method (probed with one solver, executed with another)."""
+    base = {t.path: t for t in base_plan.tensors}
+    rules = []
+    for path, pt in sorted(allocation.choices.items()):
+        pattern = f"^{re.escape(path)}$"
+        if pt.dense:
+            rules.append(CompressionRule(pattern=pattern, method="skip"))
+        else:
+            t = base[path]
+            rules.append(
+                CompressionRule(
+                    pattern=pattern,
+                    method=t.method,
+                    tile_n=pt.tile_n,
+                    tile_d=pt.tile_d,
+                    rank_ratio=pt.K / pt.tile_n,
+                    bbo_iters=t.bbo_iters if t.method == "bbo" else None,
+                )
+            )
+    return tuple(rules)
+
+
+def _verify_refined(
+    refined: CompressionPlan,
+    allocation: Allocation,
+    base_plan: CompressionPlan,
+) -> None:
+    planned = {t.path: t for t in refined.tensors}
+    base = {t.path: t for t in base_plan.tensors}
+    for path, pt in allocation.choices.items():
+        if pt.dense:
+            if path in planned:
+                raise RuntimeError(
+                    f"autotune: {path} allocated dense but re-planned "
+                    "compressed"
+                )
+            continue
+        t = planned.get(path)
+        if t is None:
+            raise RuntimeError(
+                f"autotune: {path} allocated {pt} but dropped by the "
+                "refined plan"
+            )
+        if (t.tile_n, t.tile_d, t.K) != (pt.tile_n, pt.tile_d, pt.K):
+            raise RuntimeError(
+                f"autotune: refined plan geometry "
+                f"({t.tile_n}, {t.tile_d}, {t.K}) != allocated "
+                f"({pt.tile_n}, {pt.tile_d}, {pt.K}) at {path}"
+            )
+        if t.method != base[path].method:
+            raise RuntimeError(
+                f"autotune: refined plan method {t.method!r} != probed "
+                f"method {base[path].method!r} at {path}"
+            )
+
+
+def autotune_plan(
+    values,
+    policy: CompressionPolicy,
+    budget_bytes: int,
+    *,
+    key=None,
+    engine: str = "greedy",
+    cfg=None,
+    calibration=False,
+    calibration_inputs: dict | None = None,
+    max_probe_tiles: int | None = 16,
+    tile_d_choices: int = 1,
+    k_fractions: tuple | None = None,
+    probe_bbo_iters: int | None = 8,
+    backend: str | None = None,
+    num_sweeps: int = 96,
+    num_reads: int = 8,
+    verbose: bool = False,
+) -> AutotuneResult:
+    """Probe, allocate, and re-plan ``values`` to fit ``budget_bytes``.
+
+    The budget covers every *eligible* tensor in its chosen form — a tensor
+    the allocator leaves dense is charged its dense bytes, so the refined
+    plan's compressed total is always <= budget.  ``engine`` picks the
+    allocator ("greedy" | "qubo"; the QUBO path is additionally
+    cross-checked against greedy and the gap recorded).  ``calibration``
+    weights probed distortion by activation-sensitivity second moments from
+    a calibration batch (requires ``cfg``; pass ``calibration_inputs`` to
+    supply your own batch).  ``max_probe_tiles=None`` probes every tile.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    base_plan = plan_compression(values, policy)
+    if not base_plan.tensors:
+        raise ValueError(
+            "autotune: the base policy plans no tensors (nothing to allocate)"
+        )
+
+    weights = None
+    if calibration:
+        if cfg is None:
+            raise ValueError(
+                "autotune: calibration needs cfg — the calibration "
+                "forward/backward runs the model (pass calibration_inputs "
+                "as well to supply your own batch)"
+            )
+        weights = calibration_weights(
+            values, cfg, inputs=calibration_inputs, key=key,
+            eligible=tuple(t.path for t in base_plan.tensors),
+        )
+
+    t0 = time.perf_counter()
+    probe_kw = {} if k_fractions is None else {"k_fractions": tuple(k_fractions)}
+    probes = probe_tensors(
+        values, base_plan, key=key, weights=weights,
+        max_probe_tiles=max_probe_tiles, tile_d_choices=tile_d_choices,
+        probe_bbo_iters=probe_bbo_iters, backend=backend, verbose=verbose,
+        **probe_kw,
+    )
+    probe_s = time.perf_counter() - t0
+
+    allocation = allocate_budget(
+        probes, budget_bytes, engine=engine, key=key,
+        backend=backend or policy.solver_backend,
+        num_sweeps=num_sweeps, num_reads=num_reads,
+    )
+    cross_check = None
+    if engine == "qubo":
+        ref = allocate_budget(probes, budget_bytes, engine="greedy")
+        cross_check = {
+            "greedy_distortion": ref.total_distortion,
+            "greedy_bytes": ref.total_bytes,
+            "relative_gap": (
+                (allocation.total_distortion - ref.total_distortion)
+                / max(ref.total_distortion, 1e-30)
+            ),
+        }
+        if verbose:
+            print(
+                f"  qubo cross-check: distortion {allocation.total_distortion:.4g} "
+                f"vs greedy {ref.total_distortion:.4g} "
+                f"(gap {cross_check['relative_gap']:+.1%})"
+            )
+
+    refined_policy = dataclasses.replace(
+        policy,
+        rules=allocation_rules(allocation, base_plan) + tuple(policy.rules),
+    )
+    refined = plan_compression(values, refined_policy)
+    _verify_refined(refined, allocation, base_plan)
+
+    metadata = {
+        "budget_bytes": int(budget_bytes),
+        "engine": allocation.engine,
+        "predicted_bytes": allocation.total_bytes,
+        "predicted_distortion": allocation.total_distortion,
+        "calibrated": weights is not None,
+        "probe": {
+            "max_probe_tiles": max_probe_tiles,
+            "tile_d_choices": tile_d_choices,
+        },
+        "allocation": {
+            path: pt.to_dict()
+            for path, pt in sorted(allocation.choices.items())
+        },
+    }
+    if cross_check is not None:
+        metadata["cross_check"] = cross_check
+    refined = dataclasses.replace(refined, autotune=metadata)
+    return AutotuneResult(
+        plan=refined,
+        policy=refined_policy,
+        allocation=allocation,
+        probes=tuple(probes),
+        weights=weights,
+        probe_s=probe_s,
+    )

@@ -273,5 +273,7 @@ def execute_plan(
             "ratio": ob / max(nb_total, 1),
         },
     }
+    if plan.autotune is not None:
+        manifest["autotune"] = plan.autotune
     artifact = CompressionArtifact(manifest)
     return jax.tree_util.tree_unflatten(treedef, out), artifact

@@ -80,11 +80,15 @@ class TensorPlan:
 @dataclasses.dataclass(frozen=True)
 class CompressionPlan:
     """The full planned workload: tensors to compress, tensors left dense
-    (with reasons), and the policy that produced it."""
+    (with reasons), the policy that produced it, and — when the plan came
+    out of the rate-distortion autotuner — the ``autotune`` metadata block
+    (budget, engine, per-tensor allocation) that ``execute_plan`` copies
+    into the artifact manifest."""
 
     tensors: tuple        # ordered TensorPlan (leaf order)
     skipped: tuple        # ((path, reason), ...)
     policy: CompressionPolicy
+    autotune: dict | None = None
 
     # -- aggregates ---------------------------------------------------------
     @property
@@ -98,6 +102,32 @@ class CompressionPlan:
     @property
     def pred_ratio(self) -> float:
         return self.total_orig_bytes / max(self.total_pred_bytes, 1)
+
+    def total_bytes(self) -> int:
+        """Predicted post-compression bytes of the planned tensors — the
+        quantity a ``--budget-mb`` budget gates on (skipped tensors keep
+        their dense bytes and are out of the compression accounting)."""
+        return self.total_pred_bytes
+
+    @property
+    def compression_ratio(self) -> float:
+        """Predicted orig/compressed byte ratio over the planned tensors."""
+        return self.pred_ratio
+
+    def skip_summary(self) -> dict:
+        """Distinct skip reasons -> count, insertion-ordered by first
+        occurrence.  Specific variants (``excluded (norm)`` vs ``excluded
+        (router)``) stay distinct, but per-path skip-rule patterns collapse
+        into one ``rule -> skip`` bucket — an autotuned plan keeps tensors
+        dense via one exact-path rule each, and listing every pattern would
+        be the per-path spam this summary exists to avoid (the [skip] lines
+        keep the detail)."""
+        out: dict = {}
+        for _, reason in self.skipped:
+            if reason.startswith("rule ") and reason.endswith("-> skip"):
+                reason = "rule -> skip"
+            out[reason] = out.get(reason, 0) + 1
+        return out
 
     def pools(self) -> dict:
         """pool_key -> list[TensorPlan], insertion-ordered.  Each pool
@@ -113,9 +143,27 @@ class CompressionPlan:
             f"CompressionPlan: {len(self.tensors)} tensors, "
             f"{len(self.skipped)} skipped, "
             f"{self.total_orig_bytes / 2**20:.2f} -> "
-            f"{self.total_pred_bytes / 2**20:.2f} MiB "
-            f"(predicted x{self.pred_ratio:.2f})"
+            f"{self.total_bytes() / 2**20:.2f} MiB "
+            f"(predicted x{self.compression_ratio:.2f})"
         ]
+        skips = self.skip_summary()
+        if skips:
+            lines.append(
+                "  skips: "
+                + ", ".join(f"{r} x{n}" for r, n in skips.items())
+            )
+        if self.autotune:
+            # .get throughout: the autotune block is free-form dict data
+            # (from_json accepts anything), so a partial block must not
+            # crash the printable form
+            a = self.autotune
+            lines.append(
+                f"  autotune[{a.get('engine', '?')}]: budget "
+                f"{a.get('budget_bytes', 0) / 2**20:.2f} MiB, allocated "
+                f"{a.get('predicted_bytes', 0) / 2**20:.2f} MiB, predicted "
+                f"distortion {a.get('predicted_distortion', float('nan')):.4g}"
+                + (" (calibrated)" if a.get("calibrated") else "")
+            )
         for t in self.tensors:
             rule = f"  [{t.rule}]" if t.rule else ""
             lines.append(
@@ -154,7 +202,7 @@ class CompressionPlan:
 
     # -- serialisation ------------------------------------------------------
     def to_dict(self) -> dict:
-        return {
+        d = {
             "format": "repro.compression.plan/v1",
             "policy": self.policy.to_dict(),
             "tensors": [
@@ -163,6 +211,9 @@ class CompressionPlan:
             ],
             "skipped": [list(s) for s in self.skipped],
         }
+        if self.autotune is not None:
+            d["autotune"] = self.autotune
+        return d
 
     def to_json(self, indent: int | None = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -174,7 +225,12 @@ class CompressionPlan:
             for t in d["tensors"]
         )
         skipped = tuple((p, r) for p, r in d["skipped"])
-        return cls(tensors, skipped, CompressionPolicy.from_dict(d["policy"]))
+        return cls(
+            tensors,
+            skipped,
+            CompressionPolicy.from_dict(d["policy"]),
+            d.get("autotune"),
+        )
 
     @classmethod
     def from_json(cls, s: str) -> "CompressionPlan":
@@ -214,9 +270,33 @@ def _structurally_plausible(path: str, leaf) -> bool:
     return jax.numpy.issubdtype(jax.numpy.dtype(leaf.dtype), jax.numpy.floating)
 
 
-def plan_compression(values, policy: CompressionPolicy) -> CompressionPlan:
+def plan_compression(
+    values,
+    policy: CompressionPolicy,
+    *,
+    budget_bytes: int | None = None,
+    **autotune_kw,
+) -> CompressionPlan:
     """Pure planning pass: no solver runs, no tensor data is read beyond
-    shape/dtype.  Returns a :class:`CompressionPlan`."""
+    shape/dtype.  Returns a :class:`CompressionPlan`.
+
+    With ``budget_bytes``, planning becomes a rate-distortion autotune
+    (:mod:`repro.compression.autotune`): trial compressions probe per-tensor
+    RD curves and a budget allocator picks per-tensor settings so the
+    compressed total fits the budget — no longer pure (tile subsamples are
+    trial-compressed), but deterministic per ``key``.  Extra keyword
+    arguments (``engine``, ``key``, ``cfg``, ``calibration``,
+    ``max_probe_tiles``, ...) are forwarded to
+    :func:`repro.compression.autotune.autotune_plan`."""
+    if budget_bytes is not None:
+        from repro.compression.autotune import autotune_plan
+
+        return autotune_plan(values, policy, budget_bytes, **autotune_kw).plan
+    if autotune_kw:
+        raise TypeError(
+            f"plan_compression: {sorted(autotune_kw)} only apply with "
+            "budget_bytes"
+        )
     from repro.launch import costing
 
     tensors, skipped = [], []

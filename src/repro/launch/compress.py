@@ -12,6 +12,15 @@ and validate the compressed model.
 
     PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
         --reduced --policy policy.json --plan-only
+
+With ``--budget-mb`` the flags/policy become the *base* policy of the
+rate-distortion autotuner (docs/autotune.md): per-tensor (K, tile) settings
+are chosen by probing RD curves and allocating the byte budget
+(``--engine greedy|qubo``), optionally weighted by a calibration batch
+(``--calibrate``):
+
+    PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
+        --reduced --budget-mb 0.125 --engine qubo --calibrate
 """
 
 from __future__ import annotations
@@ -24,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.compression import (
     CompressionPolicy,
+    autotune_plan,
     execute_plan,
     plan_compression,
 )
@@ -68,7 +78,39 @@ def main() -> None:
     ap.add_argument("--bbo-iters", type=int, default=64)
     ap.add_argument("--backend", default="auto", choices=["auto", "pallas", "jnp"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="autotune to this compressed-bytes budget "
+                         "(rate-distortion allocation; docs/autotune.md)")
+    ap.add_argument("--engine", default=None, choices=["greedy", "qubo"],
+                    help="budget allocator engine (default greedy; qubo "
+                         "solves the one-hot QUBO encoding through "
+                         "ising.solve_many)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="weight probed distortion by activation-sensitivity "
+                         "second moments from a calibration batch")
+    ap.add_argument("--calib-batch", type=int, default=None)
+    ap.add_argument("--calib-seq", type=int, default=None)
+    ap.add_argument("--probe-tiles", type=int, default=None,
+                    help="trial-compressed tiles per (tensor, candidate); "
+                         "0 probes every tile (exact, slower; default 16)")
     args = ap.parse_args()
+    if args.budget_mb is None:
+        stray = [
+            name for name, val in (
+                ("--engine", args.engine),
+                ("--calibrate", args.calibrate or None),
+                ("--calib-batch", args.calib_batch),
+                ("--calib-seq", args.calib_seq),
+                ("--probe-tiles", args.probe_tiles),
+            ) if val is not None
+        ]
+        if stray:
+            ap.error(f"{', '.join(stray)} only apply with --budget-mb "
+                     "(the autotune path)")
+    elif not args.calibrate and (
+        args.calib_batch is not None or args.calib_seq is not None
+    ):
+        ap.error("--calib-batch/--calib-seq require --calibrate")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -84,7 +126,37 @@ def main() -> None:
             print(f"[restore] step {step}")
 
     policy = build_policy(args)
-    plan = plan_compression(values, policy)
+    if args.budget_mb is not None:
+        budget_bytes = int(args.budget_mb * 2**20)
+        engine = args.engine or "greedy"
+        probe_tiles = 16 if args.probe_tiles is None else args.probe_tiles
+        cal_inputs = None
+        if args.calibrate:
+            from repro.compression.autotune import calibration_inputs
+
+            cal_inputs = calibration_inputs(
+                cfg, batch=args.calib_batch or 4,
+                seq_len=args.calib_seq or 32,
+                key=jax.random.PRNGKey(args.seed),
+            )
+        result = autotune_plan(
+            values, policy, budget_bytes,
+            key=jax.random.PRNGKey(args.seed),
+            engine=engine, cfg=cfg, calibration=args.calibrate,
+            calibration_inputs=cal_inputs,
+            max_probe_tiles=probe_tiles or None,
+            backend=args.backend, verbose=True,
+        )
+        plan = result.plan
+        print(
+            f"[autotune/{engine}] probed {len(result.probes)} tensors "
+            f"in {result.probe_s:.1f}s, allocated "
+            f"{result.allocation.total_bytes / 2**20:.2f} of "
+            f"{budget_bytes / 2**20:.2f} MiB "
+            f"(solve {result.allocation.solve_s * 1e3:.1f} ms)"
+        )
+    else:
+        plan = plan_compression(values, policy)
     print(plan.summary())
     if args.plan_only:
         return
@@ -99,9 +171,17 @@ def main() -> None:
     for path, ob, nb, err in report.compressed:
         print(f"  {path:48s} {ob/2**20:8.2f} -> {nb/2**20:8.2f} MiB "
               f"(x{ob/max(nb,1):4.1f})  rel_err {err:.3f}")
-    for path, reason in report.skipped:
-        print(f"  [skip] {path}: {reason}")
-    print(f"overall ratio on compressed tensors: x{report.total_ratio:.2f}")
+    # (skip reasons were already summarised by plan.summary() above)
+    print(
+        f"compressed tensors: "
+        f"{artifact.manifest['totals']['orig_bytes'] / 2**20:.2f} -> "
+        f"{artifact.total_bytes() / 2**20:.2f} MiB "
+        f"(x{artifact.compression_ratio:.2f})"
+    )
+    if args.budget_mb is not None:
+        over = artifact.total_bytes() > budget_bytes
+        print(f"budget: {args.budget_mb:.2f} MiB -> "
+              f"{'OVER' if over else 'met'}")
 
     path = checkpointer.save(args.out_dir, 0, {"params": cvalues})
     mpath = artifact.save(args.out_dir)

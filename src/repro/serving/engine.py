@@ -164,6 +164,16 @@ class Engine:
                 "ratio": round(art.total_ratio, 3),
                 "methods": methods,
             }
+            autotune = art.manifest.get("autotune")
+            if autotune:
+                # budget-allocated artifact (docs/autotune.md): surface what
+                # the model was tuned to, not just what it compressed to
+                self.compression["autotune"] = {
+                    "budget_bytes": autotune.get("budget_bytes"),
+                    "engine": autotune.get("engine"),
+                    "predicted_distortion": autotune.get("predicted_distortion"),
+                    "calibrated": autotune.get("calibrated", False),
+                }
 
         from repro.core import quantized
         from repro.kernels import ops

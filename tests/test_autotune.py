@@ -1,0 +1,413 @@
+"""Rate-distortion autotuner: allocator invariants (budget, monotonicity,
+infeasibility, greedy-vs-QUBO agreement), probe determinism/exactness, plan
+integration, and the end-to-end budgeted compress -> restore -> serve path
+through the fused kernel."""
+
+import itertools
+import os
+import random
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compression as comp
+from repro.compression.autotune import (
+    BudgetInfeasibleError,
+    ProbeResult,
+    RDPoint,
+    allocate_budget,
+    autotune_plan,
+    calibration_weights,
+    lower_hull,
+    probe_tensors,
+)
+from repro.compression.plan import tree_paths
+from repro.configs import get_config, reduced_for_smoke
+from repro.core import decomposition as dec
+from repro.models import init_model
+from repro.models.params import split
+
+
+def base_policy():
+    return comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    """Reduced qwen3 with a 4x-scaled attention output projection: the
+    heterogeneous sensitivity gives the allocator something real to
+    exploit."""
+    cfg = reduced_for_smoke(get_config("qwen3-32b"))
+    values, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+    wo = values["groups"]["0"]["attn"]["wo"]["w"]
+    values["groups"]["0"]["attn"]["wo"]["w"] = wo * 4.0
+    return cfg, values
+
+
+# ---------------------------------------------------------------------------
+# Synthetic RD instances for allocator tests
+# ---------------------------------------------------------------------------
+
+
+def synth_probes(rng: random.Random, n_tensors=None, n_points=None) -> list:
+    probes = []
+    n_tensors = n_tensors or rng.randint(1, 5)
+    for i in range(n_tensors):
+        k = n_points or rng.randint(1, 6)
+        sizes = sorted(rng.sample(range(8, 400), k))
+        top = rng.uniform(5.0, 120.0)
+        dists = sorted((rng.uniform(0.0, top) for _ in range(k)), reverse=True)
+        points = tuple(
+            RDPoint(tile_n=8, tile_d=16, K=j + 1, bytes=b, distortion=d)
+            for j, (b, d) in enumerate(zip(sizes, dists))
+        )
+        probes.append(
+            ProbeResult(path=f"t{i}", orig_bytes=sizes[-1] + 64, weight=1.0,
+                        points=points)
+        )
+    return probes
+
+
+def min_feasible(probes) -> int:
+    return sum(p.min_bytes for p in probes)
+
+
+# ---------------------------------------------------------------------------
+# Hull + greedy allocator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_lower_hull_drops_dominated_and_orders_slopes():
+    pts = [
+        RDPoint(8, 16, 1, 10, 100.0),
+        RDPoint(8, 16, 2, 20, 90.0),    # shallow: dominated by the 10->40 edge
+        RDPoint(8, 16, 3, 30, 95.0),    # dominated outright (worse than K=2)
+        RDPoint(8, 16, 4, 40, 10.0),
+        RDPoint(8, 16, 5, 40, 20.0),    # same bytes, worse distortion
+        RDPoint(8, 16, 0, 80, 0.0),
+    ]
+    hull = lower_hull(pts)
+    assert [p.bytes for p in hull] == [10, 40, 80]
+    slopes = [
+        (a.distortion - b.distortion) / (b.bytes - a.bytes)
+        for a, b in zip(hull, hull[1:])
+    ]
+    assert all(s1 > s2 for s1, s2 in zip(slopes, slopes[1:]))
+
+
+def test_allocator_never_exceeds_budget_and_is_monotone():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=120, deadline=None)
+    @given(seed=st.integers(0, 10_000), frac1=st.floats(0.0, 1.0),
+           frac2=st.floats(0.0, 1.0))
+    def run(seed, frac1, frac2):
+        rng = random.Random(seed)
+        probes = synth_probes(rng)
+        lo = min_feasible(probes)
+        hi = sum(max(p.bytes for p in pr.points) for pr in probes)
+        b1, b2 = sorted(
+            (int(lo + f * (hi - lo)) for f in (frac1, frac2))
+        )
+        a1 = allocate_budget(probes, b1, engine="greedy")
+        a2 = allocate_budget(probes, b2, engine="greedy")
+        assert a1.total_bytes <= b1
+        assert a2.total_bytes <= b2
+        # larger budget can never predict MORE distortion
+        assert a2.total_distortion <= a1.total_distortion + 1e-9
+
+    run()
+
+
+@pytest.mark.parametrize("engine", ["greedy", "qubo"])
+def test_infeasible_budget_raises_clear_error(engine):
+    rng = random.Random(7)
+    probes = synth_probes(rng, n_tensors=3)
+    bad = min_feasible(probes) - 1
+    with pytest.raises(BudgetInfeasibleError) as ei:
+        allocate_budget(probes, bad, engine=engine, key=jax.random.PRNGKey(0))
+    assert "infeasible" in str(ei.value)
+    assert str(min_feasible(probes)) in str(ei.value)
+
+
+def _bruteforce(probes, budget):
+    best = None
+    for combo in itertools.product(*(p.points for p in probes)):
+        b = sum(pt.bytes for pt in combo)
+        if b > budget:
+            continue
+        d = sum(pt.distortion for pt in combo)
+        if best is None or d < best:
+            best = d
+    return best
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_greedy_and_qubo_agree_on_small_instances(seed):
+    """Cross-check the engines on instances small enough to brute-force:
+    both must be feasible and within tolerance of the true optimum (and
+    hence of each other)."""
+    rng = random.Random(seed)
+    probes = synth_probes(rng, n_tensors=3, n_points=4)
+    lo, hi = min_feasible(probes), sum(
+        max(p.bytes for p in pr.points) for pr in probes
+    )
+    budget = (lo + hi) // 2
+    opt = _bruteforce(probes, budget)
+    greedy = allocate_budget(probes, budget, engine="greedy")
+    qubo = allocate_budget(
+        probes, budget, engine="qubo", key=jax.random.PRNGKey(seed),
+        backend="jnp",
+    )
+    assert greedy.total_bytes <= budget
+    assert qubo.total_bytes <= budget
+    tol = 0.25 * opt + 1e-6
+    assert greedy.total_distortion <= opt + tol
+    assert qubo.total_distortion <= opt + tol
+    assert abs(qubo.total_distortion - greedy.total_distortion) <= tol
+
+
+# ---------------------------------------------------------------------------
+# Probing + plan integration
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_same_seed_is_byte_identical(qwen):
+    """Satellite: deterministic-seed regression — probing with the same seed
+    twice yields byte-identical allocations (per-tile key derivation covers
+    the trial compressions; no wall-clock leaks into the plan)."""
+    cfg, values = qwen
+    kw = dict(key=jax.random.PRNGKey(3), engine="greedy", max_probe_tiles=8)
+    r1 = autotune_plan(values, base_policy(), 120_000, **kw)
+    r2 = autotune_plan(values, base_policy(), 120_000, **kw)
+    assert r1.plan.to_json() == r2.plan.to_json()
+    assert r1.allocation.choices == r2.allocation.choices
+    # round trip keeps the autotune block
+    back = comp.CompressionPlan.from_json(r1.plan.to_json())
+    assert back.autotune == r1.plan.autotune
+
+
+def _measured_sq_residual(values, cvalues, artifact, path) -> float:
+    """Sum of squared residuals of one compressed tensor vs its dense
+    original, reconstructed from the packed artifact leaves."""
+    e = artifact.manifest["tensors"][path]
+    W = dict(tree_paths(values))[path].astype(jnp.float32)
+    cleaves = dict(tree_paths(cvalues))
+    tn, td, K = e["tile_n"], e["tile_d"], e["K"]
+    d_in, d_out = e["shape"][-2], e["shape"][-1]
+    r, c = d_in // tn, d_out // td
+    mp = cleaves[path + "/m_packed"].reshape(-1, tn, (K + 7) // 8)
+    C = cleaves[path + "/C"].reshape(-1, K, td).astype(jnp.float32)
+    M = jax.vmap(lambda p: dec.unpack_bits(p, K))(mp)
+    recon = jnp.einsum("tnk,tkd->tnd", M, C)
+    tiles = (
+        W.reshape(e["groups"], r, tn, c, td)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(-1, tn, td)
+    )
+    return float(jnp.sum((tiles - recon) ** 2))
+
+
+def measured_distortion(values, cvalues, artifact) -> float:
+    return sum(
+        _measured_sq_residual(values, cvalues, artifact, path)
+        for path in artifact.manifest["tensors"]
+    )
+
+
+def test_probe_reuses_execute_key_derivation(qwen):
+    """Probing every tile at the uniform setting must reproduce execute's
+    result exactly (same per-tile keys, same pooled solver): the probed
+    distortion equals the measured squared residual of the executed plan."""
+    cfg, values = qwen
+    plan = comp.plan_compression(values, base_policy())
+    key = jax.random.PRNGKey(0)
+    probes = probe_tensors(
+        values, plan, key=key, max_probe_tiles=None, k_fractions=(0.5,),
+    )
+    cvalues, artifact = comp.execute_plan(plan, values, key=key)
+    planned = {t.path: t for t in plan.tensors}
+    for pr in probes:
+        t = planned[pr.path]
+        pt = next(p for p in pr.points if p.K == t.K)
+        assert pt.bytes == artifact.manifest["tensors"][pr.path]["new_bytes"]
+        assert pt.distortion == pytest.approx(
+            _measured_sq_residual(values, cvalues, artifact, pr.path),
+            rel=1e-4,
+        )
+
+
+def test_moe_expert_stacks_allocate_per_tensor():
+    """granite-moe's (E, d, ff) expert stacks are single allocation units:
+    one (K, tile) choice per stacked tensor, never per expert slice."""
+    cfg = reduced_for_smoke(get_config("granite-moe-1b-a400m"))
+    values, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+    plan = comp.plan_compression(values, base_policy())
+    expert_paths = [t.path for t in plan.tensors if "/moe/" in t.path]
+    assert len(expert_paths) == 3
+    assert all(
+        t.groups > 1 for t in plan.tensors if t.path in expert_paths
+    )
+    probes = probe_tensors(
+        values, plan, key=jax.random.PRNGKey(0), max_probe_tiles=4,
+    )
+    assert sorted(p.path for p in probes) == sorted(t.path for t in plan.tensors)
+    alloc = allocate_budget(probes, int(0.8 * plan.total_bytes()),
+                            engine="greedy")
+    assert sorted(alloc.choices) == sorted(t.path for t in plan.tensors)
+    for path in expert_paths:
+        assert path in alloc.choices
+
+
+def test_autotune_preserves_per_rule_method():
+    """The exact-path allocation rules must re-state the method (and BBO
+    budget) each tensor resolved in the base plan: first-match-wins would
+    otherwise silently revert a bbo-ruled tensor to the policy default and
+    execute with a different solver than was probed."""
+    values = {
+        "blk": {
+            "attn": {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 64))},
+            "mlp": {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 64))},
+        },
+    }
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=8, tile_d=16, rank_ratio=0.5,
+        min_size=512,
+        rules=(comp.CompressionRule(pattern=r"attn", method="bbo",
+                                    bbo_iters=4),),
+    )
+    base = comp.plan_compression(values, policy)
+    assert {t.path: t.method for t in base.tensors} == {
+        "blk/attn/w": "bbo", "blk/mlp/w": "alternating"
+    }
+    res = autotune_plan(
+        values, policy, base.total_bytes(), key=jax.random.PRNGKey(0),
+        max_probe_tiles=2, probe_bbo_iters=2, k_fractions=(0.25, 0.5),
+    )
+    base_methods = {t.path: t for t in base.tensors}
+    for t in res.plan.tensors:
+        assert t.method == base_methods[t.path].method, t.path
+        if t.method == "bbo":
+            assert t.bbo_iters == 4   # execution budget, not the probe cap
+
+
+def test_calibration_requires_cfg():
+    values = {"blk": {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}}
+    policy = base_policy()
+    with pytest.raises(ValueError, match="calibration needs cfg"):
+        autotune_plan(
+            values, policy, 1 << 20, calibration=True,
+            calibration_inputs={"tokens": jnp.zeros((2, 4), jnp.int32)},
+        )
+
+
+def test_calibration_weights_deterministic_and_normalised(qwen):
+    cfg, values = qwen
+    plan = comp.plan_compression(values, base_policy())
+    eligible = tuple(t.path for t in plan.tensors)
+    w1 = calibration_weights(values, cfg, key=jax.random.PRNGKey(1),
+                             eligible=eligible)
+    w2 = calibration_weights(values, cfg, key=jax.random.PRNGKey(1),
+                             eligible=eligible)
+    assert w1 == w2
+    assert all(v >= 0.0 and jnp.isfinite(v) for v in w1.values())
+    mean_eligible = sum(w1[p] for p in eligible) / len(eligible)
+    assert mean_eligible == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# End to end: budgeted compress -> manifest -> restore -> fused serving
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_end_to_end_budget_beats_uniform_and_serves(qwen):
+    """The acceptance path: an autotuned artifact fits the byte budget,
+    measures lower total distortion than the uniform plan at equal bytes,
+    restores through its manifest and serves token-identically through the
+    fused bitlinear kernel."""
+    from repro.checkpoint import checkpointer
+    from repro.serving.engine import Engine
+
+    cfg, values = qwen
+    policy = base_policy()
+    uniform = comp.plan_compression(values, policy)
+    budget = uniform.total_bytes()          # "at equal bytes"
+
+    result = autotune_plan(
+        values, policy, budget, key=jax.random.PRNGKey(0), engine="greedy",
+        max_probe_tiles=None,               # exact probing
+    )
+    plan = result.plan
+    assert plan.autotune["budget_bytes"] == budget
+    assert result.allocation.total_bytes <= budget
+
+    key = jax.random.PRNGKey(0)
+    uvals, uart = comp.execute_plan(uniform, values, key=key)
+    cvals, cart = comp.execute_plan(plan, values, key=key)
+    assert cart.total_bytes() <= budget
+    assert cart.manifest["autotune"] == plan.autotune
+
+    d_uniform = measured_distortion(values, uvals, uart)
+    d_auto = measured_distortion(values, cvals, cart)
+    # dense-kept tensors contribute zero distortion and are inside budget
+    assert d_auto < d_uniform
+    # probing with every tile makes the prediction exact
+    assert d_auto == pytest.approx(
+        result.allocation.total_distortion, rel=1e-4
+    )
+
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 0, {"params": cvals})
+        cart.save(d)
+        art = comp.CompressionArtifact.load(d)
+        assert art.manifest["autotune"]["budget_bytes"] == budget
+        template = {"params": art.restore_template(values)}
+        restored = checkpointer.restore(d, 0, template)["params"]
+
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 8), 0,
+                                 cfg.vocab_size)
+    fused = Engine(cfg, restored, max_len=24, batch=2, artifact=art)
+    assert fused.fused_bitlinear
+    assert fused.compression["autotune"]["budget_bytes"] == budget
+    assert fused.compression["autotune"]["engine"] == "greedy"
+    out_fused = fused.generate(prompts, steps=8)
+    einsum = Engine(cfg, restored, max_len=24, batch=2, artifact=art,
+                    use_fused_bitlinear=False)
+    out_einsum = einsum.generate(prompts, steps=8)
+    assert (out_fused == out_einsum).all()
+    assert out_fused.shape == (2, 16)
+
+
+def test_compress_cli_budget_mb(tmp_path):
+    """`launch/compress.py --budget-mb B` writes an artifact whose manifest
+    bytes fit the budget and carry the autotune block."""
+    budget_mb = 0.12
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.compress",
+            "--arch", "qwen3-32b", "--reduced",
+            "--budget-mb", str(budget_mb), "--engine", "greedy",
+            "--tile-n", "16", "--tile-d", "32", "--rank-ratio", "0.5",
+            "--min-size", "4096", "--probe-tiles", "8",
+            "--out-dir", str(tmp_path),
+        ],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+    art = comp.CompressionArtifact.load(str(tmp_path))
+    assert art.total_bytes() <= int(budget_mb * 2**20)
+    auto = art.manifest["autotune"]
+    assert auto["engine"] == "greedy"
+    assert auto["predicted_bytes"] <= auto["budget_bytes"]
+    assert "budget:" in proc.stdout and "met" in proc.stdout

@@ -93,7 +93,29 @@ def test_plan_emits_distinct_skip_reasons():
     assert skipped["blk/odd/w"].startswith("indivisible dims")
     # the expert stack is a target: planned, not lumped into any miss bucket
     assert [t.path for t in plan.tensors] == ["blk/moe/gate"]
+    # skip_summary aggregates the distinct reasons; the printable plan
+    # surfaces it plus the predicted-bytes totals (the CLI summary line)
+    summary = plan.skip_summary()
+    assert summary["not matched by policy"] == 1
+    assert summary["below min_size"] == 1
+    assert sum(summary.values()) == len(plan.skipped)
+    text = plan.summary()
+    assert "skips: " in text and "below min_size x1" in text
     assert plan.tensors[0].groups == 2
+
+
+def test_plan_total_bytes_helpers():
+    plan = comp.plan_compression(small_values(), base_policy())
+    assert plan.total_bytes() == sum(t.pred_bytes for t in plan.tensors)
+    assert plan.compression_ratio == pytest.approx(
+        plan.total_orig_bytes / plan.total_bytes()
+    )
+    _, artifact = comp.execute_plan(plan, small_values(),
+                                    key=jax.random.PRNGKey(0))
+    assert artifact.total_bytes() == artifact.manifest["totals"]["new_bytes"]
+    assert artifact.compression_ratio == artifact.total_ratio
+    # plan-predicted bytes equal executed bytes (the budget contract)
+    assert plan.total_bytes() == artifact.total_bytes()
 
 
 def test_plan_covers_bfloat16_and_shape_structs():
@@ -209,6 +231,15 @@ def test_plan_is_pure_and_json_roundtrips():
     plan2 = comp.CompressionPlan.from_json(plan.to_json())
     assert plan2 == plan
     assert plan.diff(plan2) == []
+    # an attached autotune metadata block survives the round trip (and its
+    # absence keeps the JSON form unchanged: no "autotune" key above)
+    assert "autotune" not in plan.to_dict()
+    import dataclasses as _dc
+
+    tuned = _dc.replace(plan, autotune={"budget_bytes": 123, "engine": "greedy"})
+    assert comp.CompressionPlan.from_json(tuned.to_json()) == tuned
+    # the printable form tolerates a partial autotune block
+    assert "autotune[greedy]" in tuned.summary()
 
 
 def test_plan_predicted_bytes_match_executed_bytes():
