@@ -1,7 +1,7 @@
 """Benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
 
-CI regenerates BENCH_serve.json / BENCH_compress.json / BENCH_ising.json on
-every run (the "fast benches") — this gate is what turns those files from
+CI regenerates BENCH_serve.json / BENCH_compress.json / BENCH_ising.json /
+BENCH_bitlinear.json on every run (the "fast benches") — this gate is what turns those files from
 decoration into a contract.  It compares each freshly produced file against
 the committed baseline (copied aside before the bench steps overwrite the
 working tree) and fails when a throughput metric drops by more than the
@@ -9,6 +9,10 @@ tolerance band:
 
   serve     per (arch, batch, decode_steps) row: dense / einsum / fused
             decode tok/s,
+  bitlinear per (kind, case, T) row: einsum-baseline and autotuned fused
+            calls/s plus the tuned-vs-einsum speedup ratio (the ratio is
+            measured from interleaved timing windows in the same process,
+            so machine drift is common-mode and cancels),
   ising     per (solver, n, problems) row: jnp / pallas spin-updates/s,
   compress  per (method, max_pool_tiles) row: pooled tiles/s
             (total_tiles / pooled_s — the batched-solve throughput),
@@ -24,7 +28,13 @@ tolerance band:
 Comparisons only run on *comparable* configs: a file whose ``device`` or
 ``pallas_mode`` differs from the baseline's (e.g. a TPU-produced baseline
 checked against a CPU CI run) is reported and skipped rather than failed —
-cross-backend wall-clock is not a regression.  Rows present in the baseline
+cross-backend wall-clock is not a regression.  The same logic applies
+per row via each suite's ``row_comparable`` fields: a serve row whose
+``fused_schedule`` differs from the baseline's, or a bitlinear row where
+the autotuner picked a different schedule, is skipped rather than
+compared — a schedule change must not masquerade as a throughput
+regression (it shows up as "skipped: ... changed" for a human to read,
+and the baseline refresh records the new schedule).  Rows present in the baseline
 but missing from the fresh file fail (a silently dropped bench case reads
 as "still covered" when it is not); new rows are reported as informational.
 
@@ -49,8 +59,21 @@ SUITES = {
         "suite": "serve",
         "comparable": ("device", "pallas_mode"),
         "key": ("arch", "batch", "decode_steps"),
+        "row_comparable": ("fused_schedule",),
         "metrics": ("dense_toks_per_s", "einsum_toks_per_s", "fused_toks_per_s"),
         "derived": {},
+    },
+    "BENCH_bitlinear.json": {
+        "suite": "bitlinear",
+        "comparable": ("device", "pallas_mode"),
+        "key": ("kind", "case", "T"),
+        "row_comparable": ("tuned_mode", "tuned_math"),
+        "metrics": (),
+        "derived": {
+            "einsum_calls_per_s": lambda r: 1e6 / r["einsum_us"],
+            "tuned_calls_per_s": lambda r: 1e6 / r["tuned_us"],
+            "tuned_speedup_vs_einsum": lambda r: r["tuned_speedup_vs_einsum"],
+        },
     },
     "BENCH_ising.json": {
         "suite": "ising",
@@ -127,6 +150,18 @@ def compare_file(name: str, baseline: dict, fresh: dict, tolerance: float):
         if frow is None:
             rows.append((spec["suite"], keystr, "-", "-", "-", "-", "MISSING"))
             failures.append(f"{spec['suite']} {keystr}: row missing from fresh run")
+            continue
+        changed = [
+            f for f in spec.get("row_comparable", ())
+            if brow.get(f) != frow.get(f)
+        ]
+        if changed:
+            rows.append((
+                spec["suite"], keystr, "-", "-", "-", "-",
+                "skipped: " + ", ".join(
+                    f"{f} {brow.get(f)!r} -> {frow.get(f)!r}" for f in changed
+                ),
+            ))
             continue
         bm, fm = _row_metrics(brow, spec), _row_metrics(frow, spec)
         for metric in bm:

@@ -157,12 +157,11 @@ def bench_compress_suite() -> dict:
     values, _ = split(init_model(jrandom.PRNGKey(0), cfg))
     key = jrandom.PRNGKey(1)
     results = []
-    # BBO chunk bound: the CPU sweet spot (surrogate temporaries scale with
-    # the chunk; chunks of 128 beat one 512-tile batch ~1.8x here) while
-    # every chunk stays deep in the >=64-problem regime the Pallas backend
-    # wants on TPU.  On TPU raise it (or pass None) to feed the kernel
-    # maximal batches.
-    bbo_chunk = 128
+    # BBO chunk bound: "auto" derives the solver chunk per pool from the
+    # surrogate-memory model (execute.auto_pool_chunk — budget via
+    # REPRO_POOL_BUDGET_BYTES), replacing the fixed 128 that regressed
+    # pooled_speedup to 0.69x: big chunks amortise compiles and keep the
+    # batched Ising solve deep in the >=64-problem regime on every backend.
     for method, bbo_iters in (("alternating", 0), ("bbo", 6)):
         policy = comp.CompressionPolicy(
             method=method, tile_n=16, tile_d=16, rank_ratio=0.375,
@@ -192,20 +191,26 @@ def bench_compress_suite() -> dict:
 
         t0 = time.perf_counter()
         cvals, artifact = comp.execute_plan(
-            plan, values, key=key,
-            max_pool_tiles=bbo_chunk if method == "bbo" else None,
+            plan, values, key=key, max_pool_tiles="auto",
         )
         jax.block_until_ready(jax.tree.leaves(cvals))
         pooled_s = time.perf_counter() - t0
 
         row = {
             "method": method,
-            "max_pool_tiles": bbo_chunk if method == "bbo" else None,
+            "max_pool_tiles": "auto",
+            # the chunk the memory model actually picked (None for the
+            # unchunked non-BBO pools)
+            "solver_chunk": next(
+                (p["solver_batch"] for p in artifact.manifest["pools"]
+                 if p["method"] == "bbo"), None,
+            ),
             "tensors": len(plan.tensors),
             "total_tiles": sum(t.num_tiles for t in plan.tensors),
             "pools": [
                 {k: p[k] for k in ("tile_n", "tile_d", "K", "method",
-                                   "num_tiles", "num_tensors", "solver_batch")}
+                                   "num_tiles", "num_tensors", "solver_batch")
+                 if k in p}
                 for p in artifact.manifest["pools"]
             ],
             "solver_batches": artifact.solver_batches(),
@@ -231,12 +236,132 @@ def bench_compress_suite() -> dict:
     return out
 
 
+def bench_bitlinear_suite(fast: bool = False) -> dict:
+    """Fused bitlinear schedule microbench: per (geometry, T) case, time the
+    unpack+einsum oracle against every bitlinear schedule lane (pallas
+    grid / decode / stream under the current pallas mode, the jnp
+    formulations) plus the autotuned best (kernels/autotune.py).  Rows
+    carry ``device``/``pallas_mode``, so a compiled-mode (TPU/GPU) lane
+    lands as new rows without schema changes.  Writes BENCH_bitlinear.json.
+    """
+    from repro.kernels import autotune
+    from repro.kernels import bitlinear as bl
+
+    # calls are microsecond-scale: deep iters cost little and are the only
+    # de-noiser that works on single-core CI runners
+    repeats, iters = (3, 50) if fast else (5, 200)
+    interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(0)
+
+    def operands(E, n_r, n_c, tn, K, td, T):
+        kb = (K + 7) // 8
+        xsh = (E, T, n_r * tn) if E else (T, n_r * tn)
+        mpsh = (E, n_r, n_c, tn, kb) if E else (n_r, n_c, tn, kb)
+        csh = (E, n_r, n_c, K, td) if E else (n_r, n_c, K, td)
+        x = jnp.asarray(rng.standard_normal(xsh).astype(np.float32))
+        mp = jnp.asarray(rng.integers(0, 256, mpsh).astype(np.uint8))
+        C = jnp.asarray(rng.standard_normal(csh).astype(np.float32))
+        return x, mp, C
+
+    # (case, E, n_r, n_c, tn, K, td): E=0 -> 2D.  Serving-shaped tiles
+    # (reduced configs land near "serve"; "wide" is a TPU-aligned tile).
+    cases = [
+        ("small", 0, 4, 2, 16, 8, 32),
+        ("serve", 0, 8, 4, 16, 16, 32),
+        ("wide", 0, 4, 8, 32, 12, 64),
+        ("moe", 4, 4, 2, 16, 8, 32),
+    ]
+    t_values = {0: (1, 16, 128), 4: (1, 8)}
+
+    lanes = {
+        "pallas_grid": autotune.Schedule("grid", "unpack"),
+        "pallas_decode": autotune.Schedule("decode", "bitplane"),
+        "pallas_stream": autotune.Schedule("stream", "unpack"),
+        "jnp_dot": autotune.Schedule("jnp", "dot"),
+        "jnp_bitplane": autotune.Schedule("jnp", "bitplane"),
+    }
+
+    results = []
+    for case, E, n_r, n_c, tn, K, td in cases:
+        for T in t_values[4 if E else 0]:
+            x, mp, C = operands(E, n_r, n_c, tn, K, td, T)
+            w = {"m_packed": mp, "C": C}
+            call = bl.bitlinear_grouped if E else bl.bitlinear
+            valid = bl.GROUPED_MODES if E else bl.MODES
+            row = {
+                "kind": "grouped" if E else "2d", "case": case,
+                "E": E, "n_r": n_r, "n_c": n_c, "tn": tn, "K": K, "td": td,
+                "T": T, "dtype": "float32",
+            }
+            best, _ = autotune.tune(x, mp, C, repeats=2, iters=10)
+            ein_fn = (
+                quantized.apply_compressed_grouped_einsum if E
+                else quantized.apply_compressed_einsum
+            )
+            fns = {"einsum": jax.jit(lambda x: ein_fn(x, w))}
+            for lane, s in lanes.items():
+                if s.mode in valid:
+                    fns[lane] = jax.jit(
+                        lambda x, s=s: call(x, mp, C, interpret=interpret,
+                                            **s.kwargs())
+                    )
+            fns["tuned"] = jax.jit(
+                lambda x: call(x, mp, C, interpret=interpret, **best.kwargs())
+            )
+            # interleaved timing windows: every lane sees the same slice of
+            # machine drift, so the per-row speedup ratios the gate watches
+            # are common-mode de-noised (min-of-windows per lane)
+            times = {k: float("inf") for k in fns}
+            for fn in fns.values():
+                jax.block_until_ready(fn(x))
+            for _ in range(repeats):
+                for k, fn in fns.items():
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        out = fn(x)
+                    jax.block_until_ready(out)
+                    times[k] = min(
+                        times[k], (time.perf_counter() - t0) / iters * 1e6
+                    )
+            row.update({f"{k}_us": v for k, v in times.items()})
+            row.update(
+                tuned_mode=best.mode, tuned_math=best.math,
+                tuned_block_t=best.block_t, tuned_r_chunk=best.r_chunk,
+                tuned_speedup_vs_einsum=row["einsum_us"] / row["tuned_us"],
+            )
+            results.append(row)
+            emit(
+                f"bitlinear_{row['kind']}_{case}_T{T}", row["tuned_us"],
+                f"einsum_us={row['einsum_us']:.1f};"
+                f"tuned={best.mode}/{best.math};"
+                f"speedup=x{row['tuned_speedup_vs_einsum']:.2f}",
+            )
+
+    out = {
+        "suite": "bitlinear",
+        "device": jax.default_backend(),
+        "pallas_mode": "interpret" if interpret else "compiled",
+        "note": (
+            "tuned_* is the autotuner's timed best over the schedule space; "
+            "pallas lanes run in interpret mode off-TPU (not representative "
+            "of TPU wall-clock)"
+        ),
+        "results": results,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_bitlinear.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def run_all() -> None:
     bench_compressed_matmul()
     bench_flash_ref()
     bench_sa_throughput()
     bench_ising_suite()
     bench_compress_suite()
+    bench_bitlinear_suite()
 
 
 def main() -> None:
@@ -245,15 +370,19 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "ising", "compress"],
-                    help="ising/compress refresh BENCH_ising.json / "
-                         "BENCH_compress.json respectively")
+                    choices=["all", "ising", "compress", "bitlinear"],
+                    help="ising/compress/bitlinear refresh their "
+                         "BENCH_*.json respectively")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI mode: fewer timing repeats (same rows)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.suite == "ising":
         bench_ising_suite()
     elif args.suite == "compress":
         bench_compress_suite()
+    elif args.suite == "bitlinear":
+        bench_bitlinear_suite(fast=args.fast)
     else:
         run_all()
 

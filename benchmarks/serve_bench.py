@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.compression import CompressionPolicy, execute_plan, plan_compression
+from repro.kernels import autotune as kernel_autotune
 from repro.kernels import ops
 from repro.configs import get_config, reduced_for_smoke
 from repro.models import init_cache, init_model
@@ -64,6 +65,24 @@ def _byte_counts(artifact) -> dict:
         "einsum_unpacked_m_bytes": int(unpacked_m),
         "bytes_ratio": dense / max(compressed, 1),
     }
+
+
+def _fused_schedule(resolutions) -> tuple[str, str]:
+    """Stable per-row summary of the schedules the fused traces resolved.
+
+    One ``kind:mode/math/btN/rcN`` term per distinct (kind, schedule) the
+    engine's prefill+decode traces went through, sorted and ';'-joined so
+    the string is order-independent.  check_regression.py treats it as a
+    row-comparability key: a schedule change (new tuner verdict, different
+    cache) must not masquerade as a throughput regression."""
+    parts, sources = set(), set()
+    for r in resolutions:
+        kind = r["key"].split("|")[1]
+        s = r["schedule"]
+        parts.add(f"{kind}:{s['mode']}/{s['math']}"
+                  f"/bt{s['block_t']}/rc{s['r_chunk']}")
+        sources.add(r["source"])
+    return ";".join(sorted(parts)) or "none", ";".join(sorted(sources)) or "none"
 
 
 def _decode_toks_per_s(eng: Engine, cfg, batch: int, steps: int,
@@ -127,7 +146,15 @@ def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:
                     ops.disable_kernels()
                 eng = Engine(cfg, params, max_len=max_len, batch=batch,
                              artifact=art, use_fused_bitlinear=fused)
+                if fused:
+                    kernel_autotune.clear_log()
                 tps = _decode_toks_per_s(eng, cfg, batch, steps)
+                if fused:
+                    sched, src = _fused_schedule(
+                        kernel_autotune.last_resolutions()
+                    )
+                    row["fused_schedule"] = sched
+                    row["fused_schedule_source"] = src
                 row[f"{name}_toks_per_s"] = tps
                 emit(f"serve_{arch}_b{batch}_{name}",
                      1e6 * batch / tps, f"toks_per_s={tps:.1f}")

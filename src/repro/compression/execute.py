@@ -24,6 +24,7 @@ see docs/compression_api.md.
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +33,65 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compression.artifact import CompressionArtifact, MANIFEST_FORMAT
 from repro.compression.plan import CompressionPlan, TensorPlan, tree_paths
 from repro.core import decomposition as dec
+from repro.core import features as feat
 from repro.core import quantized
 from repro.core.compress import compress_tile_batch, tile_matrix
 
-__all__ = ["execute_plan"]
+__all__ = [
+    "execute_plan",
+    "surrogate_tile_bytes",
+    "auto_pool_chunk",
+    "POOL_BUDGET_ENV",
+]
+
+# Budget for one pooled BBO solve's surrogate state.  The default is NOT
+# host RAM: the lock-step solve touches every tile's (p, p) Gram stack
+# each iteration, and past ~last-level-cache size the per-tile cost
+# climbs (measured on the bench pool: 8 chunks of 64 tiles beat one
+# 512-tile batch ~21s vs ~26s despite 8x the compiles).  64 MiB keeps a
+# chunk's surrogate state cache-adjacent on CPU compression hosts; raise
+# via the env var on hosts where wider batches amortise better.
+POOL_BUDGET_ENV = "REPRO_POOL_BUDGET_BYTES"
+_DEFAULT_POOL_BUDGET = 64 << 20
+_MIN_BBO_CHUNK = 64      # stay in the >=64-problem regime the batched
+                         # Ising backends want (BENCH_ising.json)
+_MAX_POOL_CHUNK = 4096   # legacy hard bound
+
+
+def surrogate_tile_bytes(tile_n: int, K: int, bbo_iters: int) -> int:
+    """Per-tile BBO surrogate footprint in bytes — the memory model behind
+    ``max_pool_tiles="auto"``.  One tile optimises n = tile_n*K spins with
+    p = 1 + n + n(n-1)/2 quadratic features; the lock-step state carries the
+    (p, p) Gram matrix plus its Cholesky/solve temporaries (~3 p^2 floats)
+    and the acquired dataset ((init_points + iters) x (n + 2) floats,
+    init_points = n per core/compress.py)."""
+    n = tile_n * K
+    p = feat.num_features(n)
+    max_points = n + max(bbo_iters, 1)
+    return 4 * (3 * p * p + 4 * p) + 4 * max_points * (n + 2)
+
+
+def auto_pool_chunk(
+    total_tiles: int,
+    tile_n: int,
+    K: int,
+    bbo_iters: int,
+    budget_bytes: int | None = None,
+) -> int:
+    """Solver chunk for one BBO pool: as many tiles per lock-step batch as
+    the surrogate budget allows (bigger batches amortise compiles and keep
+    the batched Ising solve wide), split evenly when the pool exceeds it so
+    at most two distinct chunk shapes compile."""
+    if budget_bytes is None:
+        budget_bytes = int(
+            os.environ.get(POOL_BUDGET_ENV, _DEFAULT_POOL_BUDGET)
+        )
+    per_tile = surrogate_tile_bytes(tile_n, K, bbo_iters)
+    cap = max(_MIN_BBO_CHUNK, min(_MAX_POOL_CHUNK, budget_bytes // per_tile))
+    if total_tiles <= cap:
+        return total_tiles
+    n_chunks = -(-total_tiles // cap)
+    return -(-total_tiles // n_chunks)
 
 
 def _validate(plan: CompressionPlan, leaves: dict) -> None:
@@ -133,7 +189,7 @@ def execute_plan(
     key=None,
     mesh=None,
     backend: str | None = None,
-    max_pool_tiles: int | None = 4096,
+    max_pool_tiles: int | str | None = "auto",
     verbose: bool = False,
 ):
     """Execute ``plan`` over ``values``; returns (new_values, artifact).
@@ -144,7 +200,11 @@ def execute_plan(
     never held more than one tensor's tiles, but a pool concentrates the
     whole model, whose BBO surrogate state scales as
     O(tiles * num_features^2) — chunking keeps memory bounded while every
-    chunk is still a large batch.  Chunking never changes
+    chunk is still a large batch.  The default "auto" derives each BBO
+    pool's chunk from the surrogate-memory model (:func:`auto_pool_chunk`,
+    budget via ``REPRO_POOL_BUDGET_BYTES``) and leaves the cheap
+    greedy/alternating pools unchunked; an int pins the bound for every
+    pool; None disables chunking.  Chunking never changes
     greedy/alternating results (per-tile keys); BBO results depend on the
     chunk boundaries (each chunk is its own lock-step run).
     The artifact's manifest records per-tensor geometry/bytes/errors and
@@ -165,7 +225,13 @@ def execute_plan(
     for pidx, (pool_key, members) in enumerate(pools.items()):
         tn, td, K, method, bbo_iters = pool_key
         total = sum(t.num_tiles for t in members)
-        chunk = total if not max_pool_tiles else min(total, max_pool_tiles)
+        if max_pool_tiles == "auto":
+            chunk = (
+                auto_pool_chunk(total, tn, K, bbo_iters)
+                if method == "bbo" else total
+            )
+        else:
+            chunk = total if not max_pool_tiles else min(total, max_pool_tiles)
         n_chunks = -(-total // chunk)
         bbo_key = jax.random.fold_in(jax.random.fold_in(key, 0x706F6F6C), pidx)
         parts, chunk_sizes = [], []
@@ -208,6 +274,13 @@ def execute_plan(
             "solver_batch": max(chunk_sizes) if method == "bbo" else None,
             "bbo_iters": bbo_iters,
             "solver_calls": bbo_iters * n_chunks if method == "bbo" else 0,
+            # chunk provenance: "auto" rows also record the memory model
+            # input so a bench row is self-describing
+            "chunk_policy": "auto" if max_pool_tiles == "auto" else "fixed",
+            **(
+                {"surrogate_tile_bytes": surrogate_tile_bytes(tn, K, bbo_iters)}
+                if method == "bbo" else {}
+            ),
         })
         if verbose:
             print(

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import quantized
+from repro.kernels import autotune
 from repro.kernels.bitlinear import bitlinear as _bitlinear
 from repro.kernels.bitlinear import bitlinear_grouped as _bitlinear_grouped
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -41,19 +42,24 @@ def default_interpret() -> bool:
 
 
 def bitlinear(x, m_packed, C, block_t: int = 128, interpret: bool | None = None,
-              mode: str = "auto"):
+              mode: str = "auto", math: str = "unpack", r_chunk: int = 1,
+              vmem_budget: int | None = None):
     if interpret is None:
         interpret = default_interpret()
     return _bitlinear(x, m_packed, C, block_t=block_t, interpret=interpret,
-                      mode=mode)
+                      mode=mode, math=math, r_chunk=r_chunk,
+                      vmem_budget=vmem_budget)
 
 
 def bitlinear_grouped(x, m_packed, C, block_t: int = 128,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, mode: str = "auto",
+                      math: str = "unpack", r_chunk: int = 1,
+                      vmem_budget: int | None = None):
     if interpret is None:
         interpret = default_interpret()
     return _bitlinear_grouped(x, m_packed, C, block_t=block_t,
-                              interpret=interpret)
+                              interpret=interpret, mode=mode, math=math,
+                              r_chunk=r_chunk, vmem_budget=vmem_budget)
 
 
 def flash_attention(q, k, v, window: int = 0, interpret: bool | None = None, **kw):
@@ -134,33 +140,53 @@ def disable_kernels() -> None:
 
 
 def apply_compressed_fused(x, w, block_t: int = 128,
-                           interpret: bool | None = None, mode: str = "auto"):
+                           interpret: bool | None = None, mode: str = "auto",
+                           schedule: "autotune.Schedule | None" = None):
     """Fused compressed linear: y = (x @ M) @ C via the bitlinear kernel.
     x (..., d_in) -> (..., d_out), any number of leading dims (including
-    none); T not divisible by ``block_t`` is padded inside the kernel."""
+    none); T not divisible by ``block_t`` is padded inside the kernel.
+
+    Schedule selection: an explicit ``schedule`` pins everything; otherwise
+    ``mode="auto"`` resolves through the autotune cache at trace time
+    (tuned manifest entry when one matches this device/pallas_mode, else
+    the heuristic default — see kernels/autotune.py).  A non-auto ``mode``
+    bypasses resolution and keeps the kernel's static behaviour."""
     C = w["C"]
     n_r, n_c, K, td = C.shape
     lead = x.shape[:-1]
     T = 1
     for d in lead:
         T *= d
-    y = bitlinear(x.reshape(T, x.shape[-1]), w["m_packed"], C,
-                  block_t=block_t, interpret=interpret, mode=mode)
+    x2 = x.reshape(T, x.shape[-1])
+    if schedule is None and mode == "auto":
+        schedule = autotune.resolve_fused(x2, w["m_packed"], C)
+    kw = schedule.kwargs() if schedule is not None else {
+        "mode": mode, "block_t": block_t,
+    }
+    y = bitlinear(x2, w["m_packed"], C, interpret=interpret, **kw)
     return y.reshape(*lead, n_c * td)
 
 
 def apply_compressed_grouped_fused(x, w, block_t: int = 128,
-                                   interpret: bool | None = None):
+                                   interpret: bool | None = None,
+                                   mode: str = "auto",
+                                   schedule: "autotune.Schedule | None" = None):
     """Grouped fused compressed linear: y_e = (x_e @ M_e) @ C_e via the
     grouped bitlinear kernel.  x (E, ..., d_in) -> (E, ..., d_out) with the
     leading axis matching the weight's group (expert) axis; any inner lead
-    dims (the MoE (B, C) dispatch dims) flatten into the kernel's T axis."""
+    dims (the MoE (B, C) dispatch dims) flatten into the kernel's T axis.
+    Schedule selection as in :func:`apply_compressed_fused`."""
     C = w["C"]
     E, n_r, n_c, K, td = C.shape
     lead = x.shape[1:-1]
     T = 1
     for d in lead:
         T *= d
-    y = bitlinear_grouped(x.reshape(E, T, x.shape[-1]), w["m_packed"], C,
-                          block_t=block_t, interpret=interpret)
+    x3 = x.reshape(E, T, x.shape[-1])
+    if schedule is None and mode == "auto":
+        schedule = autotune.resolve_grouped(x3, w["m_packed"], C)
+    kw = schedule.kwargs() if schedule is not None else {
+        "mode": mode, "block_t": block_t,
+    }
+    y = bitlinear_grouped(x3, w["m_packed"], C, interpret=interpret, **kw)
     return y.reshape(E, *lead, n_c * td)

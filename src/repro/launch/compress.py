@@ -78,6 +78,10 @@ def main() -> None:
     ap.add_argument("--bbo-iters", type=int, default=64)
     ap.add_argument("--backend", default="auto", choices=["auto", "pallas", "jnp"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune-kernels", action="store_true",
+                    help="after compressing, probe kernel schedules for the "
+                         "manifest's geometries and persist the winners into "
+                         "manifest['kernel_schedules'] (kernels/autotune.py)")
     ap.add_argument("--budget-mb", type=float, default=None,
                     help="autotune to this compressed-bytes budget "
                          "(rate-distortion allocation; docs/autotune.md)")
@@ -182,6 +186,17 @@ def main() -> None:
         over = artifact.total_bytes() > budget_bytes
         print(f"budget: {args.budget_mb:.2f} MiB -> "
               f"{'OVER' if over else 'met'}")
+
+    if args.autotune_kernels:
+        # probe-then-serve: tune the kernel schedule table for every
+        # geometry this manifest can produce and persist it alongside the
+        # compressed checkpoint — Engine restores it, serving never re-tunes
+        from repro.kernels import autotune as kernel_autotune
+
+        t = time.time()
+        table = kernel_autotune.tune_artifact(artifact, verbose=True)
+        print(f"[autotune] {len(table['entries'])} kernel schedule(s) in "
+              f"{time.time()-t:.1f}s")
 
     path = checkpointer.save(args.out_dir, 0, {"params": cvalues})
     mpath = artifact.save(args.out_dir)

@@ -47,6 +47,11 @@ def main() -> None:
                     help="escape hatch: serve compressed weights through the "
                          "unpack+einsum fallback instead of the fused Pallas "
                          "bitlinear kernel")
+    ap.add_argument("--autotune-kernels", action="store_true",
+                    help="probe kernel schedules for this manifest's "
+                         "geometries (timed best-of-N, kernels/autotune.py) "
+                         "and persist the winners into "
+                         "manifest['kernel_schedules'] before serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -100,6 +105,18 @@ def main() -> None:
         print(f"[compress] {len(report.compressed)} tensors, "
               f"ratio {report.total_ratio:.2f}x, {time.time()-t:.1f}s; "
               f"skipped {len(report.skipped)}")
+
+    if args.autotune_kernels and artifact is not None:
+        from repro.kernels import autotune as kernel_autotune
+
+        t = time.time()
+        table = kernel_autotune.tune_artifact(
+            artifact,
+            T_values=(args.batch, args.batch * args.prompt_len),
+            verbose=True,
+        )
+        print(f"[autotune] {len(table['entries'])} kernel schedule(s) in "
+              f"{time.time()-t:.1f}s")
 
     eng = Engine(cfg, values, max_len=args.prompt_len + args.steps,
                  batch=args.batch, temperature=args.temperature,

@@ -181,7 +181,23 @@ class Engine:
         fused = self.use_fused_bitlinear
         if fused is None:
             fused = self.artifact is not None
+        self.kernel_schedules = 0
         if fused:
+            if self.compression is not None:
+                # tuned schedule table (kernels/autotune.py): install before
+                # enable_kernels so the first prefill/decode trace resolves
+                # the tuned schedules instead of re-tuning or falling back
+                # to heuristics — serving never re-tunes
+                table = self.artifact.manifest.get("kernel_schedules")
+                if table:
+                    from repro.kernels import autotune as kernel_autotune
+
+                    self.kernel_schedules = kernel_autotune.load_schedules(
+                        table
+                    )
+                    self.compression["kernel_schedules"] = (
+                        self.kernel_schedules
+                    )
             ops.enable_kernels()
         elif self.use_fused_bitlinear is False:
             quantized.clear_bitlinear()

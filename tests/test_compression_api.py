@@ -385,6 +385,61 @@ def test_ragged_final_chunk_recorded():
     assert art.solver_batches() == [4, 2]
 
 
+def test_auto_pool_chunk_memory_model():
+    """max_pool_tiles="auto" sizes BBO solve batches from the surrogate
+    memory model: whole pool when it fits the budget, even split when not,
+    never below the batched-solver floor."""
+    from repro.compression.execute import auto_pool_chunk, surrogate_tile_bytes
+
+    per = surrogate_tile_bytes(8, 3, 64)     # n = 24 spins, p = 301 features
+    assert 1_000_000 < per < 1_300_000       # Gram + temporaries ~ 1.1 MB
+    # bench pool (512 tiles of 8x16 K=3) fits a 1 GiB budget in one batch
+    assert auto_pool_chunk(512, 8, 3, 64, budget_bytes=1 << 30) == 512
+    # over budget: even split so at most two chunk shapes compile
+    chunk = auto_pool_chunk(1000, 8, 3, 64, budget_bytes=100 << 20)
+    n_chunks = -(-1000 // chunk)
+    assert chunk < 1000 and chunk * n_chunks >= 1000
+    assert chunk * per <= 100 << 20 or chunk == 64
+    # a tiny budget still keeps the >=64-problem regime the Ising
+    # backends are benched at
+    assert auto_pool_chunk(512, 32, 8, 64, budget_bytes=1) == 64
+
+
+def test_auto_chunk_recorded_in_pool_stats(monkeypatch):
+    """execute_plan(max_pool_tiles="auto") chunks BBO pools by the memory
+    model (env-overridable budget) and records the policy + model input in
+    the pool stats; non-BBO pools stay unchunked."""
+    from repro.compression.execute import POOL_BUDGET_ENV, surrogate_tile_bytes
+
+    values = {"a": {"w": jax.random.normal(jax.random.PRNGKey(3), (24, 32))}}
+    pol = comp.CompressionPolicy(method="bbo", tile_d=16, rank_ratio=0.375,
+                                 min_size=1, bbo_iters=2)
+    plan = comp.plan_compression(values, pol)     # 3 * 2 = 6 tiles
+    _, art = comp.execute_plan(plan, values)      # default: "auto"
+    pool = art.manifest["pools"][0]
+    assert pool["chunk_policy"] == "auto"
+    assert pool["surrogate_tile_bytes"] == surrogate_tile_bytes(8, 3, 2)
+    assert pool["chunks"] == 1                    # 6 tiles fit any budget
+
+    # the budget env var reaches the chunker (floored at the solver regime)
+    monkeypatch.setenv(POOL_BUDGET_ENV, "1")
+    _, art_env = comp.execute_plan(plan, values)
+    assert art_env.manifest["pools"][0]["chunk_sizes"] == [6]  # 6 < floor 64
+
+    _, art_greedy = comp.execute_plan(
+        plan_compression_greedy(values), values
+    )
+    gpool = art_greedy.manifest["pools"][0]
+    assert gpool["chunk_policy"] == "auto" and gpool["chunks"] == 1
+    assert "surrogate_tile_bytes" not in gpool
+
+
+def plan_compression_greedy(values):
+    pol = comp.CompressionPolicy(method="greedy", tile_d=16, rank_ratio=0.375,
+                                 min_size=1)
+    return comp.plan_compression(values, pol)
+
+
 def test_execute_validates_plan_against_values():
     values = small_values()
     plan = comp.plan_compression(values, base_policy())

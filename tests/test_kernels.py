@@ -35,13 +35,18 @@ def test_bitlinear_matches_ref(T, nr, nc, tn, K, td, dtype):
     x = jax.random.normal(k3, (T, nr * tn)).astype(dtype)
     y_r = ref.bitlinear_ref(x, Mp, C)
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
-    for mode in ("auto", "grid", "decode"):
-        y_k = ops.bitlinear(x, Mp, C, block_t=min(128, max(T, 8)),
-                            interpret=True, mode=mode)
-        np.testing.assert_allclose(
-            np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
-            rtol=tol, atol=tol, err_msg=f"mode={mode}",
-        )
+    # every schedule point the autotuner can pick must agree with the
+    # oracle: all pallas modes (stream included) x both bit algebras —
+    # bitplane (z = 2 x@B - rowsum) vs unpack is an exactness check on the
+    # bit-plane algebra across the whole sweep, not a tolerance artifact
+    for mode in ("auto", "grid", "decode", "stream"):
+        for math in ("unpack", "bitplane"):
+            y_k = ops.bitlinear(x, Mp, C, block_t=min(128, max(T, 8)),
+                                interpret=True, mode=mode, math=math)
+            np.testing.assert_allclose(
+                np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
+                rtol=tol, atol=tol, err_msg=f"mode={mode} math={math}",
+            )
 
 
 @pytest.mark.parametrize("B,H,KV,S,hd,win,bq", [

@@ -100,6 +100,37 @@ def test_grouped_parity_triangle(E, nr, nc, tn, K, td, T, dtype):
                             seed=E * 1000 + K * 10 + T)
 
 
+@pytest.mark.parametrize("E,nr,nc,tn,K,td,T,dtype", [
+    (1, 2, 2, 16, 4, 32, 3, jnp.bfloat16),    # E=1 degenerate, ragged T, bf16
+    (4, 2, 3, 16, 5, 16, 7, jnp.float32),     # ragged T across experts
+    (3, 1, 2, 8, 3, 32, 1, jnp.bfloat16),     # MoE decode T=1
+    (2, 2, 2, 16, 12, 8, 16, jnp.float32),    # K > 8, max decode-window T
+])
+@pytest.mark.parametrize("math", ["unpack", "bitplane"])
+def test_grouped_decode_fast_path_parity(E, nr, nc, tn, K, td, T, dtype, math):
+    """The grouped decode fast path (one expert-column per grid step, C
+    resident in VMEM) against the triangle — ragged T, bf16, E=1 included;
+    both bit algebras must agree with the einsum path and the oracle."""
+    key = jax.random.PRNGKey(E * 100 + T)
+    w = _random_grouped_w(key, E, nr, nc, tn, K, td)
+    x = jax.random.normal(
+        jax.random.fold_in(key, 1), (E, T, nr * tn)
+    ).astype(dtype)
+    y_dec = ops.bitlinear_grouped(x, w["m_packed"], w["C"], interpret=True,
+                                  mode="decode", math=math)
+    y_grid = ops.bitlinear_grouped(x, w["m_packed"], w["C"], block_t=8,
+                                   interpret=True, mode="grid", math=math)
+    y_einsum = quantized.apply_compressed_grouped_einsum(x, w)
+    y_ref = ref.bitlinear_grouped_ref(x, w["m_packed"], w["C"])
+    assert y_dec.shape == (E, T, nc * td) and y_dec.dtype == x.dtype
+    tol = 5e-5 if dtype == jnp.float32 else 8e-2
+    for name, y in (("grid", y_grid), ("einsum", y_einsum), ("ref", y_ref)):
+        np.testing.assert_allclose(
+            np.asarray(y_dec, np.float32), np.asarray(y, np.float32),
+            rtol=tol, atol=tol, err_msg=name,
+        )
+
+
 def test_grouped_kernel_multi_block_padding():
     """T=13 with block_t=8: per-expert padding + multi-block grid."""
     w = _random_grouped_w(jax.random.PRNGKey(5), 3, 2, 2, 16, 5, 16)
