@@ -7,8 +7,12 @@ the committed baseline (copied aside before the bench steps overwrite the
 working tree) and fails when a throughput metric drops by more than the
 tolerance band:
 
-  serve     per (arch, batch, decode_steps) row: dense / einsum / fused
-            decode tok/s,
+  serve     fixed rows per (arch, batch, decode_steps): dense / einsum /
+            fused decode tok/s; load rows per (arch, mode, qps): goodput
+            and inverse p99 latency under Poisson arrivals through the
+            continuous-batching scheduler; one load_summary row per arch:
+            the compressed-over-dense goodput ratio at sustained QPS
+            (machine-speed independent — both sides measured in-process),
   bitlinear per (kind, case, T) row: einsum-baseline and autotuned fused
             calls/s plus the tuned-vs-einsum speedup ratio (the ratio is
             measured from interleaved timing windows in the same process,
@@ -58,10 +62,20 @@ SUITES = {
     "BENCH_serve.json": {
         "suite": "serve",
         "comparable": ("device", "pallas_mode"),
-        "key": ("arch", "batch", "decode_steps"),
+        # three row kinds share the file: kind="fixed" (arch/batch/
+        # decode_steps set), kind="load" (arch/mode/qps set) and
+        # kind="load_summary" (arch set); absent fields key as None
+        "key": ("kind", "arch", "batch", "decode_steps", "mode", "qps"),
         "row_comparable": ("fused_schedule",),
-        "metrics": ("dense_toks_per_s", "einsum_toks_per_s", "fused_toks_per_s"),
-        "derived": {},
+        "metrics": (
+            "dense_toks_per_s", "einsum_toks_per_s", "fused_toks_per_s",
+            "goodput_toks_per_s", "compressed_over_dense_goodput",
+        ),
+        "derived": {
+            # load rows only (others lack the field -> KeyError -> skipped):
+            # p99 latency gated as a higher-is-better inverse
+            "p99_inv_per_s": lambda r: 1.0 / r["p99_latency_s"],
+        },
     },
     "BENCH_bitlinear.json": {
         "suite": "bitlinear",

@@ -61,7 +61,7 @@ def main() -> None:
     paper_experiments.run_all()
     kernel_bench.run_all()
     compress_scale.run_all()
-    serve_bench.bench_serve_suite(fast=SCALE == "quick")
+    serve_bench.bench_serve_suite(fast=SCALE == "quick", load_curve=True)
     summarize_dryrun()
     summarize_roofline()
 

@@ -16,7 +16,16 @@ CPU container the kernels run in Pallas *interpret* mode, so fused
 wall-clock is NOT representative of TPU — the json records the mode; the
 dense/einsum times and all byte counts are real.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+With ``--load-curve`` the suite additionally serves open-loop Poisson
+arrival sweeps through the continuous-batching scheduler + paged KV cache
+(serving/scheduler.py): for each arch x {dense, compressed-fused} x QPS it
+records p50/p99 latency (from *intended* arrival time), goodput
+(completed tokens / makespan), peak concurrency and evictions as
+``kind: "load"`` rows, plus one ``kind: "load_summary"`` row per arch with
+the compressed-over-dense goodput ratio at each mode's highest sustainable
+QPS — the serving-capacity headline the regression gate holds.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--fast] [--load-curve]
 
 Writes BENCH_serve.json at the repo root (CI keeps it fresh in fast mode).
 """
@@ -30,6 +39,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.compression import CompressionPolicy, execute_plan, plan_compression
@@ -38,11 +48,21 @@ from repro.kernels import ops
 from repro.configs import get_config, reduced_for_smoke
 from repro.models import init_cache, init_model
 from repro.models.params import split
+from repro.serving import Scheduler, ServeFrontend, run_load
 from repro.serving.engine import Engine
 
 ARCHS = ("qwen3-32b", "mistral-nemo-12b", "granite-moe-1b-a400m")
 BATCHES = (1, 4, 16)
 PROMPT_LEN = 8
+
+# load-curve sweep: the QPS grid is identical in --fast and full runs so
+# per-PR fast rows cover the committed baseline keys (the gate fails on
+# missing rows); --fast only reduces request count and tokens per request
+LOAD_ARCHS = ("qwen3-32b", "granite-moe-1b-a400m")
+LOAD_QPS = (2.0, 8.0, 32.0)
+LOAD_PROMPT_LENS = (4, 6, 8)     # small fixed set bounds prefill traces
+LOAD_MAX_LEN = 32
+LOAD_EOS = 10 ** 6               # never emitted: token counts deterministic
 
 
 def _byte_counts(artifact) -> dict:
@@ -112,7 +132,113 @@ def _decode_toks_per_s(eng: Engine, cfg, batch: int, steps: int,
     return batch * steps / best
 
 
-def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:
+def _load_prompts(cfg, n: int, seed: int = 42) -> list:
+    rng = np.random.default_rng(seed)
+    lens = rng.choice(LOAD_PROMPT_LENS, size=n)
+    return [
+        rng.integers(0, cfg.vocab_size, size=int(L)).astype(np.int32)
+        for L in lens
+    ]
+
+
+def _sustained(results):
+    """Highest-QPS run that kept up (all requests completed, goodput within
+    85% of the offered token rate); falls back to the max-goodput run when
+    every offered rate overloaded the server."""
+    ok = [
+        r for r in results
+        if r.completed == r.n_requests
+        and r.goodput_toks_per_s >= 0.85 * r.offered_toks_per_s
+    ]
+    return ok[-1] if ok else max(results, key=lambda r: r.goodput_toks_per_s)
+
+
+def bench_load_curves(fast: bool = False) -> list[dict]:
+    """Arrival-rate sweeps through the scheduler; see module docstring."""
+    n_req = 8 if fast else 24
+    max_tokens = 4 if fast else 8
+    rows: list[dict] = []
+    for arch in LOAD_ARCHS:
+        cfg = reduced_for_smoke(get_config(arch))
+        values, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+        policy = CompressionPolicy(
+            method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+            min_size=4096,
+        )
+        plan = plan_compression(values, policy)
+        cvals, artifact = execute_plan(plan, values, key=jax.random.PRNGKey(0))
+        by_mode: dict[str, list] = {}
+        for mode in ("dense", "compressed"):
+            # dense first; hooks bind at trace time (see bench_serve_suite)
+            if mode == "dense":
+                ops.disable_kernels()
+                eng = Engine(cfg, values, max_len=LOAD_MAX_LEN, batch=1,
+                             eos_id=LOAD_EOS, use_fused_bitlinear=False)
+            else:
+                eng = Engine(cfg, cvals, max_len=LOAD_MAX_LEN, batch=1,
+                             eos_id=LOAD_EOS, artifact=artifact)
+            sched = Scheduler(eng, num_slots=4, page_size=8,
+                              max_len=LOAD_MAX_LEN)
+            if mode == "compressed":
+                kernel_autotune.clear_log()
+            # warm-up: trace every prefill bucket + the decode step outside
+            # the timed sweeps (first-request compile would drown p99)
+            sched.generate_batch(
+                [np.full(L, 3, np.int32) for L in LOAD_PROMPT_LENS],
+                max_tokens=2,
+            )
+            fsched = (
+                _fused_schedule(kernel_autotune.last_resolutions())
+                if mode == "compressed" else None
+            )
+            runs = []
+            with ServeFrontend(sched, overcommit=2.0,
+                               max_pending=4 * n_req) as fe:
+                for qps in LOAD_QPS:
+                    sched.stats.reset()
+                    res = run_load(
+                        fe, _load_prompts(cfg, n_req), max_tokens, qps,
+                        eos_id=LOAD_EOS,
+                    )
+                    runs.append(res)
+                    row = {
+                        "kind": "load", "arch": arch, "mode": mode,
+                        "qps": qps, **res.to_row(),
+                    }
+                    if fsched is not None:
+                        row["fused_schedule"] = fsched[0]
+                        row["fused_schedule_source"] = fsched[1]
+                    rows.append(row)
+                    emit(
+                        f"serve_load_{arch}_{mode}_q{qps:g}",
+                        1e6 * res.p50_latency_s,
+                        f"goodput={res.goodput_toks_per_s:.1f}"
+                        f" p99={res.p99_latency_s * 1e3:.1f}ms"
+                        f" peak={res.peak_running} ev={res.evictions}",
+                    )
+            by_mode[mode] = runs
+        d, c = _sustained(by_mode["dense"]), _sustained(by_mode["compressed"])
+        rows.append({
+            "kind": "load_summary", "arch": arch,
+            "n_requests": n_req, "max_tokens": max_tokens,
+            "dense_sustained_qps": d.qps,
+            "compressed_sustained_qps": c.qps,
+            "dense_goodput_toks_per_s": d.goodput_toks_per_s,
+            "compressed_goodput_toks_per_s": c.goodput_toks_per_s,
+            "compressed_over_dense_goodput": (
+                c.goodput_toks_per_s / d.goodput_toks_per_s
+            ),
+        })
+        emit(
+            f"serve_load_{arch}_summary", 1.0,
+            f"ratio={c.goodput_toks_per_s / d.goodput_toks_per_s:.3f}"
+            f" dense@q{d.qps:g} compressed@q{c.qps:g}",
+        )
+    return rows
+
+
+def bench_serve_suite(fast: bool = False, out_path: str | None = None,
+                      load_curve: bool = False) -> dict:
     steps = 8 if fast else 24
     results = []
     for arch in ARCHS:
@@ -127,6 +253,7 @@ def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:
         bytes_row = _byte_counts(artifact)
         for batch in BATCHES:
             row = {
+                "kind": "fixed",
                 "arch": arch, "batch": batch, "decode_steps": steps,
                 "tensors_compressed": len(artifact.manifest["tensors"]),
                 **bytes_row,
@@ -160,6 +287,9 @@ def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:
                      1e6 * batch / tps, f"toks_per_s={tps:.1f}")
             results.append(row)
 
+    if load_curve:
+        results.extend(bench_load_curves(fast=fast))
+
     out = {
         "suite": "serve",
         "device": jax.default_backend(),
@@ -185,11 +315,15 @@ def bench_serve_suite(fast: bool = False, out_path: str | None = None) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="CI mode: fewer decode steps")
+                    help="CI mode: fewer decode steps / load requests")
+    ap.add_argument("--load-curve", action="store_true",
+                    help="also sweep Poisson arrival rates through the "
+                         "continuous-batching scheduler (kind=load rows)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    out = bench_serve_suite(fast=args.fast, out_path=args.out)
+    out = bench_serve_suite(fast=args.fast, out_path=args.out,
+                            load_curve=args.load_curve)
     print(f"wrote BENCH_serve.json ({len(out['results'])} rows, "
           f"pallas_mode={out['pallas_mode']})")
 

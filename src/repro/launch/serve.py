@@ -9,6 +9,11 @@ engine validates the restored tree against it.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduced \
         --compress --steps 32 --batch 4
+
+``--load-curve`` swaps the one-shot fixed-batch generation for the
+continuous-batching tier (serving/scheduler.py): ragged prompts arrive as a
+Poisson process at each ``--qps`` rate through the async front end, and the
+launcher prints per-rate p50/p99 latency, goodput and peak concurrency.
 """
 
 from __future__ import annotations
@@ -52,6 +57,18 @@ def main() -> None:
                          "geometries (timed best-of-N, kernels/autotune.py) "
                          "and persist the winners into "
                          "manifest['kernel_schedules'] before serving")
+    ap.add_argument("--load-curve", action="store_true",
+                    help="serve a Poisson arrival sweep through the "
+                         "continuous-batching scheduler instead of one "
+                         "fixed-batch generate() call")
+    ap.add_argument("--qps", type=float, nargs="*", default=[2.0, 8.0, 32.0],
+                    help="arrival rates for --load-curve")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="requests per --load-curve rate")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="decode slots for --load-curve")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens) for --load-curve")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -126,6 +143,42 @@ def main() -> None:
         path = "fused bitlinear kernel" if eng.fused_bitlinear else "unpack+einsum"
         print(f"[engine] serving compressed weights via {path}: "
               f"{eng.compression}")
+
+    if args.load_curve:
+        import numpy as np
+
+        from repro.serving import Scheduler, ServeFrontend, run_load
+
+        max_len = args.prompt_len + args.steps
+        page = min(args.page_size, max_len)
+        while max_len % page != 0:
+            page //= 2
+        sched = Scheduler(eng, num_slots=args.num_slots, page_size=page,
+                          max_len=max_len)
+        rng = np.random.default_rng(args.seed)
+        lens = sorted({max(2, args.prompt_len // 2), args.prompt_len})
+        # warm-up traces every prefill bucket + the decode step
+        sched.generate_batch([np.full(L, 3, np.int32) for L in lens],
+                             max_tokens=2)
+        prompts = [
+            rng.integers(0, cfg.vocab_size, size=int(rng.choice(lens)))
+            .astype(np.int32)
+            for _ in range(args.requests)
+        ]
+        print("qps,completed,goodput_toks_per_s,p50_ms,p99_ms,peak,evictions")
+        with ServeFrontend(sched, overcommit=2.0,
+                           max_pending=4 * args.requests) as fe:
+            for qps in args.qps:
+                sched.stats.reset()
+                res = run_load(fe, prompts, max_tokens=args.steps, qps=qps,
+                               eos_id=10 ** 6)
+                print(f"{qps:g},{res.completed},"
+                      f"{res.goodput_toks_per_s:.1f},"
+                      f"{1e3 * res.p50_latency_s:.1f},"
+                      f"{1e3 * res.p99_latency_s:.1f},"
+                      f"{res.peak_running},{res.evictions}")
+        return
+
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
     )

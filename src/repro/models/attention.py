@@ -208,6 +208,10 @@ def _chunked_attention_unrolled(
 def _decode_attention(qh, ck, cv, valid, scale, out_dtype):
     """Single-token attention over the cache.
 
+    ``valid`` is either (Smax,) — every row decodes at the same position —
+    or (B, Smax) for per-slot positions (continuous batching: each slot is
+    at its own sequence length).
+
     Flash-decode (hillclimb, EXPERIMENTS.md §Perf): when activation rules
     advertise a sequence-sharding axis for the cache, run under shard_map —
     each device computes partial softmax stats over its local KV slice and
@@ -222,9 +226,13 @@ def _decode_attention(qh, ck, cv, valid, scale, out_dtype):
     B, KVh, rep, hd = qh.shape
     Smax = ck.shape[1]
 
+    def _mask(s, val):
+        vb = val[:, None, None, :] if val.ndim == 2 else val[None, None, None]
+        return jnp.where(vb, s, -jnp.inf)
+
     def plain(q, k, v, val):
         s = jnp.einsum("bgrh,bkgh->bgrk", q, k).astype(jnp.float32) * scale
-        s = jnp.where(val[None, None, None], s, -jnp.inf)
+        s = _mask(s, val)
         w = jax.nn.softmax(s, axis=-1).astype(out_dtype)
         return jnp.einsum("bgrk,bkgh->bgrh", w, v)
 
@@ -250,7 +258,7 @@ def _decode_attention(qh, ck, cv, valid, scale, out_dtype):
     def partial_attn(q, k, v, val):
         # local shapes: q (B/dp, KV, rep, hd); k/v (B/dp, S/ax, KV, hd)
         s = jnp.einsum("bgrh,bkgh->bgrk", q, k).astype(jnp.float32) * scale
-        s = jnp.where(val[None, None, None], s, -jnp.inf)
+        s = _mask(s, val)
         m = jnp.max(s, axis=-1, keepdims=True)
         g_m = jax.lax.pmax(m, axis)
         c = jnp.where(jnp.isfinite(m), jnp.exp(m - g_m), 0.0)
@@ -260,12 +268,37 @@ def _decode_attention(qh, ck, cv, valid, scale, out_dtype):
         den = jax.lax.psum(jnp.sum(p, axis=-1) * c[..., 0], axis)
         return (num / jnp.maximum(den, 1e-30)[..., None]).astype(out_dtype)
 
+    valid_spec = P(dp, axis) if valid.ndim == 2 else P(axis)
     fn = jax.shard_map(
         partial_attn,
-        in_specs=(P(dp), P(dp, axis), P(dp, axis), P(axis)),
+        in_specs=(P(dp), P(dp, axis), P(dp, axis), valid_spec),
         out_specs=P(dp),
     )
     return fn(qh, ck, cv, valid)
+
+
+def _chunk_cache_attention(qh, ck, cv, qpos, window, scale, out_dtype):
+    """Chunked-prefill attention: a chunk of queries against the FULL cache.
+
+    qh (B, S, KV, rep, hd) are the current chunk's queries at absolute
+    positions ``qpos`` ((S,) or (B, S)); ck/cv (B, Smax, KV, hd) is the
+    updated cache (the chunk's own k/v already written at those positions).
+    Used by continuation chunks (pos_offset > 0), where the chunk-local
+    flash path would miss everything prefetched by earlier chunks.  Memory
+    is O(S * Smax) per head — bounded by the scheduler's chunk size.
+    """
+    B, S = qh.shape[:2]
+    Smax = ck.shape[1]
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qh, ck).astype(jnp.float32) * scale
+    kpos = jnp.arange(Smax)
+    qp = qpos if qpos.ndim == 2 else qpos[None]           # (B|1, S)
+    mask = kpos[None, None, :] <= qp[:, :, None]          # (B|1, S, Smax)
+    if window > 0:
+        mask &= kpos[None, None, :] > qp[:, :, None] - window
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bgrqk,bkgh->bqgrh", w, cv)
+    return o.astype(out_dtype)
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
@@ -286,11 +319,22 @@ def attention(
     window: int | None = None,
     q_chunk: int | None = None,
     unroll: bool = False,
+    attend_cache: bool = False,
 ):
     """Returns (out, new_cache).  Modes:
       cache is None              -> training/prefill without cache
       cache given, S == 1        -> decode step at position pos_offset
-      cache given, S > 1         -> prefill writing the cache
+      cache given, S > 1         -> prefill writing the cache; with
+                                    ``attend_cache=True`` the chunk's queries
+                                    attend to the FULL cache (continuation
+                                    chunks of a chunked prefill at
+                                    pos_offset > 0), otherwise chunk-local
+                                    flash attention (a full prefill from 0)
+
+    ``pos_offset`` may be a scalar (every row at the same position — the
+    fixed-batch path) or a (B,) vector of per-slot positions (continuous
+    batching: each slot is at its own sequence length).  Vector positions
+    write the cache via a per-row scatter and mask attention per slot.
     """
     B, S, d = h.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -306,7 +350,11 @@ def attention(
         q = _head_rms(q, p["q_norm"]["scale"], cfg.norm_eps)
         k = _head_rms(k, p["k_norm"]["scale"], cfg.norm_eps)
 
-    positions = pos_offset + jnp.arange(S)
+    pos_is_vec = isinstance(pos_offset, jax.Array) and pos_offset.ndim == 1
+    if pos_is_vec:
+        positions = pos_offset[:, None] + jnp.arange(S)   # (B, S)
+    else:
+        positions = pos_offset + jnp.arange(S)            # (S,)
     q = _rope(q, positions, cfg.rope_theta)
     k = _rope(k, positions, cfg.rope_theta)
 
@@ -320,7 +368,21 @@ def attention(
 
     new_cache = cache
     if cache is not None:
-        if ring and S >= cache_len:
+        if pos_is_vec:
+            # per-slot write positions: each row lands at its own offset
+            if ring and S > 1:
+                raise NotImplementedError(
+                    "vector pos_offset with a ring (window-sized) cache is "
+                    "decode-only (S == 1)"
+                )
+            wp = jnp.mod(pos_offset, cache_len) if ring else pos_offset
+
+            def _wr(cb, xb, pb):   # cb (Smax, KV, hd), xb (S, KV, hd)
+                return jax.lax.dynamic_update_slice_in_dim(cb, xb, pb, axis=0)
+
+            ck = jax.vmap(_wr)(cache["k"], k, wp)
+            cv = jax.vmap(_wr)(cache["v"], v, wp)
+        elif ring and S >= cache_len:
             # prefill longer than the window: only the last `window` tokens
             # matter; place token (pos_offset + t) at ring slot (pos+t) % w.
             roll = jnp.mod(pos_offset + (S - cache_len), cache_len)
@@ -338,16 +400,26 @@ def attention(
         Smax = ck.shape[1]
         qh = q.reshape(B, KV, rep, hd)
         kpos = jnp.arange(Smax)
+        pb = pos_offset[:, None] if pos_is_vec else pos_offset
         if ring:
             # entries are the last `window` tokens by construction; only the
-            # not-yet-written slots (pos_offset < cache_len) are invalid.
-            valid = (kpos <= pos_offset) | (pos_offset >= cache_len)
+            # not-yet-written slots (pos < cache_len) are invalid.
+            valid = (kpos <= pb) | (pb >= cache_len)
         else:
-            valid = kpos <= pos_offset
+            valid = kpos <= pb
             if window > 0:
-                valid &= kpos > pos_offset - window
+                valid &= kpos > pb - window
+        # valid: (Smax,) scalar pos / (B, Smax) per-slot pos
         o = _decode_attention(qh, ck, cv, valid, 1.0 / math.sqrt(hd), h.dtype)
         o = o.reshape(B, 1, H * hd)
+    elif cache is not None and attend_cache:
+        # ---- chunked prefill: chunk queries vs the full updated cache ----
+        qh = q.reshape(B, S, KV, rep, hd)
+        o = _chunk_cache_attention(
+            qh, new_cache["k"], new_cache["v"], positions, window,
+            1.0 / math.sqrt(hd), h.dtype,
+        )
+        o = o.reshape(B, S, H * hd)
     else:
         qh = q.reshape(B, S, KV, rep, hd)
         if unroll:

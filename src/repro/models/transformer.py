@@ -80,7 +80,8 @@ def _init_shared_attn(key, cfg: ModelConfig, dtype) -> dict:
 
 
 def _apply_block(
-    h, p, kind, cfg: ModelConfig, shared, *, cache, pos_offset, window, unroll
+    h, p, kind, cfg: ModelConfig, shared, *, cache, pos_offset, window, unroll,
+    attend_cache=False,
 ):
     """Returns (h, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -90,14 +91,14 @@ def _apply_block(
             n = layers.rms_norm(h, p["norm1"], cfg.norm_eps)
             a, new_kv = attn_lib.attention(
                 n, p["attn"], cfg, pos_offset=pos_offset, cache=kv,
-                window=window, unroll=unroll,
+                window=window, unroll=unroll, attend_cache=attend_cache,
             )
             h = h + a + layers.mlp(n, p["mlp"])
             return h, ({"kv": new_kv} if cache is not None else None), aux
         a, new_kv = attn_lib.attention(
             layers.rms_norm(h, p["norm1"], cfg.norm_eps),
             p["attn"], cfg, pos_offset=pos_offset, cache=kv,
-            window=window, unroll=unroll,
+            window=window, unroll=unroll, attend_cache=attend_cache,
         )
         h = h + a
         if kind == "attn":
@@ -122,7 +123,7 @@ def _apply_block(
             a, new_kv = attn_lib.attention(
                 layers.rms_norm(h, shared["norm1"], cfg.norm_eps),
                 shared["attn"], cfg, pos_offset=pos_offset, cache=kv,
-                window=window, unroll=unroll,
+                window=window, unroll=unroll, attend_cache=attend_cache,
             )
             h = h + a
             h = h + layers.mlp(
@@ -134,7 +135,8 @@ def _apply_block(
     raise ValueError(kind)
 
 
-def _apply_group(h, gp, cfg: ModelConfig, shared, *, cache, pos_offset, window, unroll):
+def _apply_group(h, gp, cfg: ModelConfig, shared, *, cache, pos_offset, window, unroll,
+                 attend_cache=False):
     aux = jnp.zeros((), jnp.float32)
     new_cache = {} if cache is not None else None
     for i, kind in enumerate(cfg.block_pattern):
@@ -143,6 +145,7 @@ def _apply_group(h, gp, cfg: ModelConfig, shared, *, cache, pos_offset, window, 
             h, gp[key], kind, cfg, shared,
             cache=None if cache is None else cache[key],
             pos_offset=pos_offset, window=window, unroll=unroll,
+            attend_cache=attend_cache,
         )
         if cache is not None:
             new_cache[key] = nc
@@ -273,6 +276,7 @@ def forward(
     last_only: bool = False,
     return_hidden: bool = False,
     unroll_groups: bool = False,
+    attend_cache: bool = False,
 ):
     """inputs: {"tokens": (B,S) int32} or {"embeds": (B,S,d)}.
     Returns (logits (B,S,V), new_cache, aux_loss).  ``last_only`` computes
@@ -295,6 +299,7 @@ def forward(
     group_fn = functools.partial(
         _apply_group, cfg=cfg, shared=shared,
         pos_offset=pos_offset, window=window, unroll=unroll,
+        attend_cache=attend_cache,
     )
     # remat in costing (unroll) mode too, so autodiff recompute FLOPs are
     # counted the same way the production scan path executes them.
@@ -351,6 +356,7 @@ def forward(
                 return _apply_block(
                     h_, bp_, kind, cfg, sh_, cache=bcache,
                     pos_offset=pos_offset, window=window, unroll=unroll,
+                    attend_cache=attend_cache,
                 )
 
             if remat_rem:

@@ -1,0 +1,30 @@
+"""Serving tier: fixed-batch engine, continuous-batching scheduler over a
+paged KV cache, and the async front end + load generator that drive it."""
+
+from repro.serving.engine import (
+    Engine,
+    cache_shardings,
+    make_decode_step,
+    make_prefill,
+    make_prefill_chunk,
+)
+from repro.serving.frontend import ServeFrontend
+from repro.serving.kv_pages import PagePool
+from repro.serving.loadgen import LoadResult, poisson_arrivals, run_load
+from repro.serving.scheduler import Request, Scheduler, SchedulerStats
+
+__all__ = [
+    "Engine",
+    "cache_shardings",
+    "make_decode_step",
+    "make_prefill",
+    "make_prefill_chunk",
+    "PagePool",
+    "Scheduler",
+    "SchedulerStats",
+    "Request",
+    "ServeFrontend",
+    "LoadResult",
+    "poisson_arrivals",
+    "run_load",
+]

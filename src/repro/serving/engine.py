@@ -8,9 +8,13 @@ the decode_* dry-run cells lower.  The cache layout under pjit:
   the sharded-softmax collectives are inserted by XLA SPMD.
   SSM state (B, nh, hp, ds): batch over dp, heads over model when divisible.
 
-The Engine class is the single-host driver used by examples/: greedy or
-temperature sampling, EOS handling, simple continuous batching (a finished
-slot is refilled from the queue; the cache slot is re-prefilled).
+The Engine class is the single-host *fixed-batch* driver used by examples/:
+greedy or temperature sampling with EOS masking over one rectangular batch.
+Continuous batching — per-decode-step admission/eviction, a paged KV cache
+and an async front end — lives in ``serving/scheduler.py`` /
+``serving/kv_pages.py`` / ``serving/frontend.py`` (docs/serving.md); the
+scheduler drives the same ``make_prefill`` / ``make_decode_step`` closures
+with per-slot position vectors.
 """
 
 from __future__ import annotations
@@ -26,7 +30,13 @@ from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import forward, init_cache
 from repro.models.frontends import needs_embeds
 
-__all__ = ["make_decode_step", "make_prefill", "cache_shardings", "Engine"]
+__all__ = [
+    "make_decode_step",
+    "make_prefill",
+    "make_prefill_chunk",
+    "cache_shardings",
+    "Engine",
+]
 
 
 def cache_shardings(cfg: ModelConfig, pcfg: ParallelConfig, mesh: Mesh, batch: int,
@@ -78,11 +88,38 @@ def make_prefill(cfg: ModelConfig, unroll_groups: bool = False):
     return prefill
 
 
+def make_prefill_chunk(cfg: ModelConfig, attend_cache: bool = True):
+    """prefill_chunk(params, inputs, cache, pos) -> (logits (B,S,V), cache).
+
+    One chunk of a chunked prefill: the chunk's tokens are written to the
+    cache at positions ``pos .. pos+S`` and (with ``attend_cache=True``)
+    attend to the *full* cache, so a prompt can be prefilled in pieces
+    interleaved with decode steps (serving/scheduler.py).  The first chunk
+    of a prompt (``pos == 0``) may use ``attend_cache=False`` — there is
+    nothing earlier to attend to, and the chunk-local flash path is then
+    bit-identical to ``make_prefill``.  Returns all chunk logits (not just
+    the last position) because a padded final chunk samples at the last
+    *real* prompt index.
+    """
+
+    def prefill_chunk(params, inputs, cache, pos):
+        logits, cache, _ = forward(
+            params, inputs, cfg, cache=cache, pos_offset=pos,
+            attend_cache=attend_cache,
+        )
+        return logits, cache
+
+    return prefill_chunk
+
+
 def make_decode_step(cfg: ModelConfig, unroll_groups: bool = False):
     """decode_step(params, token (B,) or embed (B,d), cache, pos) ->
-    (logits (B,V), cache).  ``pos`` is the index the new token is written to
-    (scalar; continuous batching with ragged positions is handled by the
-    Engine via per-slot pos when needed — dry-run lowers the scalar form).
+    (logits (B,V), cache).  ``pos`` is the index the new token is written
+    to — either a scalar (whole batch at the same position: the fixed-batch
+    ``Engine.generate`` path, and what dry-run lowers) or a (B,) vector of
+    per-slot positions (continuous batching: the scheduler's slots each sit
+    at their own sequence length; attention masks per slot and the cache
+    write scatters per row).
 
     ``unroll_groups``: python-unrolled layer loop + unstacked caches — the
     production serving layout for big models (EXPERIMENTS.md §Perf H10)."""
@@ -207,15 +244,28 @@ class Engine:
         self.decode = jax.jit(make_decode_step(self.cfg))
 
     def generate(self, prompts: jax.Array, steps: int, key=None) -> jax.Array:
-        """prompts (B, P) int32 -> (B, P+steps) greedy/sampled tokens."""
+        """prompts (B, P) int32 -> (B, P+steps) greedy/sampled tokens.
+
+        Sequences that emit ``eos_id`` are finished: their remaining
+        positions pad with ``eos_id`` (the output stays rectangular) and
+        their slots stop contributing fresh tokens; once every sequence is
+        finished the decode loop exits early instead of burning steps.
+        """
         B, Plen = prompts.shape
         cache = init_cache(self.cfg, B, self.max_len)
         last, cache = self.prefill(self.params, {"tokens": prompts}, cache)
         toks = [prompts]
         cur = self._pick(last, key, 0)
+        done = jnp.zeros((B,), bool)
         for t in range(steps):
+            cur = jnp.where(done, self.eos_id, cur).astype(jnp.int32)
             toks.append(cur[:, None])
+            done = done | (cur == self.eos_id)
             if t == steps - 1:
+                break
+            if bool(jnp.all(done)):
+                toks.append(jnp.full((B, steps - 1 - t), self.eos_id,
+                                     prompts.dtype))
                 break
             logits, cache = self.decode(self.params, cur, cache, Plen + t)
             cur = self._pick(logits, key, t + 1)

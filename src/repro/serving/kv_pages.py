@@ -1,0 +1,320 @@
+"""Paged KV cache: a fixed-size page pool + per-sequence page tables.
+
+The continuous-batching scheduler (serving/scheduler.py) cannot afford a
+dense ``(num_slots, max_len)`` KV allocation per slot — most sequences are
+far shorter than ``max_len``, and admission should be bounded by *actual*
+KV bytes, not by the worst case.  This module stores the sequence axis of
+every full-length KV leaf in a shared pool of fixed-size pages:
+
+    dense leaf   (G, B, max_len, KV, hd)        (models.init_cache layout)
+    pool leaf    (num_pages, G, page_size, KV, hd)
+    page table   (num_slots, max_len // page_size) int32
+
+Sequences allocate pages as they grow (``ensure``), free them on finish or
+eviction (``release``), and the pool's free count is the admission /
+backpressure signal.  Page 0 is a reserved scratch page: unoccupied slots
+and padded prefill tokens scatter their writes there, so a masked slot can
+never corrupt a live sequence's pages.
+
+The *views* are the integration contract: ``gather`` materialises the
+standard dense cache tree — bit-identical in structure and dtype to
+``models.init_cache`` — so the existing attention path and
+``serving.engine.cache_shardings`` consume it without any layout change to
+``models/``; ``scatter_decode`` / ``scatter_prefill`` write the
+newly-produced tokens back into their pages.  On accelerators a fused
+paged-attention kernel would read pages directly; this reference keeps the
+gather explicit (and jit-fused with the step) so correctness is auditable.
+
+Leaves without a ``max_len`` sequence axis — SSM/conv state, and
+window-sized ring KV caches — are per-slot *resident* state: allocated
+dense at ``num_slots`` and reset to zero when a slot is (re)admitted.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_cache
+
+__all__ = ["PagePool"]
+
+
+def _leaf_meta(path, leaf, max_len: int):
+    """(lead, paged) for one cache leaf.  ``lead`` is 1 when the leaf has a
+    stacked group dim in front (cache["groups"] subtree), else 0; ``paged``
+    iff the leaf is a full-length KV plane (seq axis == max_len)."""
+    names = [str(p.key) for p in path if hasattr(p, "key")]
+    lead = 1 if "groups" in names else 0
+    paged = (
+        names[-1] in ("k", "v")
+        and leaf.ndim >= lead + 2
+        and leaf.shape[lead + 1] == max_len
+    )
+    return lead, paged
+
+
+class PagePool:
+    """Page pool + tables + resident state for one scheduler instance.
+
+    Device state lives in ``self.pools`` (dict: flat-leaf-index -> pool
+    array) and ``self.resident`` (flat leaf list, ``None`` at paged
+    positions); the scheduler threads both through its jitted steps and
+    writes the outputs back.  Host state (``table``, free list, per-slot
+    page lists) is plain numpy/python — allocation is control flow, not
+    compute.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 page_size: int = 16, num_pages: int | None = None):
+        if max_len % page_size != 0:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of page_size={page_size}"
+            )
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.max_pages_per_seq = max_len // page_size
+        if num_pages is None:
+            # fully provisioned: every slot can reach max_len (+1 scratch)
+            num_pages = num_slots * self.max_pages_per_seq + 1
+        if num_pages < 2:
+            raise ValueError("need at least 1 usable page beside the scratch page")
+        self.num_pages = num_pages
+
+        template = jax.eval_shape(lambda: init_cache(cfg, num_slots, max_len))
+        flat, self.treedef = jax.tree_util.tree_flatten_with_path(template)
+        self._template_flat = flat
+        self._lead = []
+        self._paged = []
+        self.pools: dict[str, jax.Array] = {}
+        self.resident: list = []
+        for i, (path, leaf) in enumerate(flat):
+            lead, paged = _leaf_meta(path, leaf, max_len)
+            self._lead.append(lead)
+            self._paged.append(paged)
+            if paged:
+                lead_shape = leaf.shape[:lead]
+                tail = leaf.shape[lead + 2:]
+                self.pools[str(i)] = jnp.zeros(
+                    (num_pages,) + lead_shape + (page_size,) + tail, leaf.dtype
+                )
+                self.resident.append(None)
+            else:
+                self.resident.append(jnp.zeros(leaf.shape, leaf.dtype))
+
+        # host-side allocation state; page 0 is the reserved scratch page
+        self.table = np.zeros((num_slots, self.max_pages_per_seq), np.int32)
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._slot_pages: list[list[int]] = [[] for _ in range(num_slots)]
+        self.pages_high_water = 0
+
+    # ------------------------------------------------------------------
+    # host-side allocation
+    # ------------------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def slot_pages(self, slot: int) -> int:
+        return len(self._slot_pages[slot])
+
+    def ensure(self, slot: int, upto_len: int) -> bool:
+        """Allocate pages so slot covers positions [0, upto_len).  Returns
+        False (allocating nothing) when the pool cannot satisfy it."""
+        if upto_len > self.max_len:
+            raise ValueError(f"sequence length {upto_len} > max_len {self.max_len}")
+        need = self.pages_needed(upto_len) - len(self._slot_pages[slot])
+        if need <= 0:
+            return True
+        if need > len(self._free):
+            return False
+        for _ in range(need):
+            pid = self._free.pop()
+            idx = len(self._slot_pages[slot])
+            self._slot_pages[slot].append(pid)
+            self.table[slot, idx] = pid
+        self.pages_high_water = max(self.pages_high_water, self.pages_in_use)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free all of a slot's pages (finish / eviction) and point its
+        table row at the scratch page."""
+        self._free.extend(reversed(self._slot_pages[slot]))
+        self._slot_pages[slot] = []
+        self.table[slot, :] = 0
+
+    def reset_slot_state(self, slot: int) -> None:
+        """Zero the resident (non-paged) state rows of a slot — SSM/conv
+        state and ring KV carry across tokens, so a re-admitted slot must
+        not inherit the previous occupant's state."""
+        out = []
+        for i, r in enumerate(self.resident):
+            if r is None:
+                out.append(None)
+            elif self._lead[i]:
+                out.append(r.at[:, slot].set(0))
+            else:
+                out.append(r.at[slot].set(0))
+        self.resident = out
+
+    def device_table(self) -> jax.Array:
+        return jnp.asarray(self.table)
+
+    # ------------------------------------------------------------------
+    # pure gather/scatter views (traced inside the scheduler's jits)
+    # ------------------------------------------------------------------
+
+    def gather(self, pools, resident, tables):
+        """Dense cache views for the whole slot batch.
+
+        Returns the standard ``init_cache``-layout tree: paged leaves are
+        gathered ``pool[table]`` views, resident leaves pass through.
+        Table entries of unoccupied positions point at the scratch page;
+        whatever they gather is masked by attention's ``pos`` validity.
+        """
+        leaves = []
+        for i, (path, tmpl) in enumerate(self._template_flat):
+            if not self._paged[i]:
+                leaves.append(resident[i])
+                continue
+            pl = pools[str(i)]               # (N, *lead, P, *tail)
+            g = pl[tables]                   # (B, Mp, *lead, P, *tail)
+            if self._lead[i]:
+                g = jnp.moveaxis(g, 2, 0)    # (G, B, Mp, P, *tail)
+            B = tables.shape[0]
+            lead_shape = tmpl.shape[: self._lead[i]]
+            tail = tmpl.shape[self._lead[i] + 2:]
+            leaves.append(g.reshape(lead_shape + (B, self.max_len) + tail))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def gather_slot(self, pools, resident, table_row, slot):
+        """Batch-1 dense cache view of one slot (the prefill path).
+        ``table_row`` (Mp,) and ``slot`` may be traced."""
+        leaves = []
+        for i, (path, tmpl) in enumerate(self._template_flat):
+            lead = self._lead[i]
+            if not self._paged[i]:
+                leaves.append(
+                    jax.lax.dynamic_slice_in_dim(resident[i], slot, 1, axis=lead)
+                )
+                continue
+            pl = pools[str(i)]               # (N, *lead, P, *tail)
+            g = pl[table_row]                # (Mp, *lead, P, *tail)
+            if lead:
+                g = jnp.moveaxis(g, 1, 0)    # (G, Mp, P, *tail)
+            lead_shape = tmpl.shape[:lead]
+            tail = tmpl.shape[lead + 2:]
+            g = g.reshape(lead_shape + (self.max_len,) + tail)
+            leaves.append(jnp.expand_dims(g, lead))   # (*lead, 1, S, *tail)
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def _new_cache_leaves(self, new_cache):
+        flat, treedef = jax.tree_util.tree_flatten(new_cache)
+        if len(flat) != len(self._template_flat):
+            raise ValueError("new_cache tree does not match the cache template")
+        return flat
+
+    def scatter_decode(self, pools, new_cache, tables, pos, active):
+        """Write each slot's decode token (at ``pos[b]``) back to its page.
+        ``active`` (B,) bool: inactive slots (free, or mid-prefill — their
+        pages hold live prefill data) are redirected to the scratch page."""
+        flat = self._new_cache_leaves(new_cache)
+        B = pos.shape[0]
+        page_idx = jnp.clip(pos // self.page_size, 0, self.max_pages_per_seq - 1)
+        pid = jnp.where(active, tables[jnp.arange(B), page_idx], 0)
+        off = pos % self.page_size
+        out = dict(pools)
+        for i in range(len(flat)):
+            if not self._paged[i]:
+                continue
+            lead = self._lead[i]
+            leaf = flat[i]                   # (*lead, B, S, *tail)
+            idx = pos.reshape((1,) * lead + (B, 1) + (1,) * (leaf.ndim - lead - 2))
+            tok = jnp.take_along_axis(leaf, idx, axis=lead + 1)
+            tok = jnp.squeeze(tok, axis=lead + 1)      # (*lead, B, *tail)
+            if lead:
+                tok = jnp.moveaxis(tok, 1, 0)          # (B, G, *tail)
+                out[str(i)] = out[str(i)].at[pid, :, off].set(tok)
+            else:
+                out[str(i)] = out[str(i)].at[pid, off].set(tok)
+        return out
+
+    def scatter_prefill(self, pools, new_cache, table_row, start, real_len,
+                        chunk: int):
+        """Write a batch-1 prefill chunk's tokens (absolute positions
+        ``start .. start+chunk``) back to the slot's pages.  ``chunk`` is
+        static (the padded chunk length); positions at or beyond
+        ``real_len`` (pad tokens) go to the scratch page."""
+        flat = self._new_cache_leaves(new_cache)
+        offs = jnp.arange(chunk)
+        positions = start + offs
+        page_idx = jnp.clip(positions // self.page_size, 0,
+                            self.max_pages_per_seq - 1)
+        pid = jnp.where(offs < real_len, table_row[page_idx], 0)
+        off = positions % self.page_size
+        out = dict(pools)
+        for i in range(len(flat)):
+            if not self._paged[i]:
+                continue
+            lead = self._lead[i]
+            leaf = flat[i]                   # (*lead, 1, S, *tail)
+            sl = jax.lax.dynamic_slice_in_dim(leaf, start, chunk, axis=lead + 1)
+            sl = jnp.squeeze(sl, axis=lead)            # (chunk, *tail) or (G, chunk, *tail)
+            if lead:
+                sl = jnp.moveaxis(sl, 1, 0)            # (chunk, G, *tail)
+                out[str(i)] = out[str(i)].at[pid, :, off].set(sl)
+            else:
+                out[str(i)] = out[str(i)].at[pid, off].set(sl)
+        return out
+
+    def update_resident(self, resident, new_cache, active):
+        """Carry updated resident state for active slots only — a masked
+        slot's SSM/ring state must not be advanced by its dummy token."""
+        flat = self._new_cache_leaves(new_cache)
+        out = []
+        for i, r in enumerate(resident):
+            if r is None:
+                out.append(None)
+                continue
+            lead = self._lead[i]
+            sel = active.reshape((1,) * lead + (-1,) + (1,) * (flat[i].ndim - lead - 1))
+            out.append(jnp.where(sel, flat[i], r))
+        return out
+
+    def update_resident_slot(self, resident, new_cache, slot):
+        """Write back one slot's resident state after a prefill chunk."""
+        flat = self._new_cache_leaves(new_cache)
+        out = []
+        for i, r in enumerate(resident):
+            if r is None:
+                out.append(None)
+                continue
+            lead = self._lead[i]
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                r, flat[i].astype(r.dtype), slot, axis=lead
+            ))
+        return out
+
+    # ------------------------------------------------------------------
+
+    def view_template(self):
+        """eval_shape tree of ``gather``'s output — identical to
+        ``models.init_cache(cfg, num_slots, max_len)``, which is the
+        contract that lets ``cache_shardings`` shard the views."""
+        return jax.tree_util.tree_unflatten(
+            self.treedef, [leaf for _, leaf in self._template_flat]
+        )

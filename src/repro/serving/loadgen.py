@@ -1,0 +1,88 @@
+"""Open-loop Poisson load generation against the serving front end.
+
+``run_load`` replays a Poisson arrival process at a given QPS: each request
+is submitted at its *intended* arrival time (open loop — a slow server does
+not slow the arrival clock, it builds queueing delay), and per-request
+latency is measured from the intended arrival to completion.  This is the
+measurement the ``--load-curve`` rows in BENCH_serve.json come from; see
+docs/serving.md for how to read the resulting curves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+__all__ = ["LoadResult", "poisson_arrivals", "run_load"]
+
+
+@dataclasses.dataclass
+class LoadResult:
+    qps: float
+    n_requests: int
+    completed: int
+    total_tokens: int
+    makespan_s: float
+    goodput_toks_per_s: float
+    offered_toks_per_s: float
+    p50_latency_s: float
+    p99_latency_s: float
+    mean_latency_s: float
+    peak_running: int
+    evictions: int
+
+    def to_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
+    """(n,) arrival offsets in seconds from t0 (exponential inter-arrivals)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def run_load(frontend, prompts, max_tokens: int, qps: float, seed: int = 0,
+             temperature: float = 0.0, eos_id: int | None = None) -> LoadResult:
+    """Submit ``prompts`` with Poisson(qps) arrivals, wait for completion,
+    return latency/goodput statistics.  ``frontend.scheduler.stats`` should
+    be reset (and the scheduler idle) before calling for clean counters."""
+    arrivals = poisson_arrivals(len(prompts), qps, seed=seed)
+    stats = frontend.scheduler.stats
+    ev0 = stats.evictions
+    t0 = time.perf_counter()
+    pending = []
+    for prompt, at in zip(prompts, arrivals):
+        delay = at - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        fut = frontend.submit(
+            prompt, max_tokens=max_tokens, temperature=temperature,
+            eos_id=eos_id,
+        )
+        pending.append((fut, t0 + at))
+    lat, total_tokens, last_done = [], 0, t0
+    completed = 0
+    for fut, intended in pending:
+        req = fut.result()
+        completed += 1
+        total_tokens += len(req.tokens)
+        lat.append(req.t_done - intended)
+        last_done = max(last_done, req.t_done)
+    makespan = max(last_done - t0, 1e-9)
+    lat_a = np.asarray(lat) if lat else np.asarray([0.0])
+    return LoadResult(
+        qps=qps,
+        n_requests=len(prompts),
+        completed=completed,
+        total_tokens=total_tokens,
+        makespan_s=makespan,
+        goodput_toks_per_s=total_tokens / makespan,
+        offered_toks_per_s=qps * max_tokens,
+        p50_latency_s=float(np.percentile(lat_a, 50)),
+        p99_latency_s=float(np.percentile(lat_a, 99)),
+        mean_latency_s=float(lat_a.mean()),
+        peak_running=stats.peak_running,
+        evictions=stats.evictions - ev0,
+    )

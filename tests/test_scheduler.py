@@ -1,0 +1,392 @@
+"""Continuous-batching serving tier: paged KV pool, per-slot-position
+decode, scheduler token identity, preemption, and the async front end."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding
+
+from repro import compression as comp
+from repro.configs import get_config, reduced_for_smoke
+from repro.kernels import ops
+from repro.models import init_cache, init_model
+from repro.models.params import split
+from repro.serving import (
+    Engine,
+    PagePool,
+    Scheduler,
+    ServeFrontend,
+    cache_shardings,
+    make_decode_step,
+    make_prefill,
+    make_prefill_chunk,
+    run_load,
+)
+
+EOS_NEVER = 500          # > reduced vocab (257): generation never stops early
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_for_smoke(get_config("qwen3-32b"))
+    vals, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+    return cfg, vals
+
+
+@pytest.fixture(scope="module")
+def qwen_compressed(qwen):
+    cfg, vals = qwen
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+    plan = comp.plan_compression(vals, policy)
+    cvals, artifact = comp.execute_plan(plan, vals, key=jax.random.PRNGKey(0))
+    return cfg, cvals, artifact
+
+
+def _ragged_prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(0, cfg.vocab_size, size=L).astype(np.int32)
+        for L in lengths
+    ]
+
+
+def _reference_rows(eng, prompts, steps):
+    """Per-prompt batch-1 fixed-batch generation — the identity target."""
+    out = []
+    for p in prompts:
+        full = eng.generate(jnp.asarray(p)[None], steps=steps)
+        out.append(np.asarray(full)[0, len(p):].tolist())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# page pool
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_alloc_free_invariants(qwen):
+    cfg, _ = qwen
+    pool = PagePool(cfg, num_slots=2, max_len=32, page_size=8, num_pages=5)
+    assert pool.num_free == 4  # page 0 is scratch
+    assert pool.pages_needed(1) == 1 and pool.pages_needed(8) == 1
+    assert pool.pages_needed(9) == 2
+
+    assert pool.ensure(0, 9)
+    assert pool.slot_pages(0) == 2 and pool.num_free == 2
+    assert pool.ensure(0, 9)           # idempotent
+    assert pool.num_free == 2
+    assert pool.ensure(1, 16)
+    assert pool.num_free == 0
+    assert not pool.ensure(0, 17)      # pool dry: refuses without allocating
+    assert pool.slot_pages(0) == 2
+    pool.release(1)
+    assert pool.num_free == 2
+    assert (pool.table[1] == 0).all()  # freed slot points at scratch
+    assert pool.ensure(0, 32)
+    assert pool.pages_high_water == 4
+    with pytest.raises(ValueError):
+        pool.ensure(0, 33)             # beyond max_len
+
+
+def test_page_pool_roundtrip_and_view_contract(qwen):
+    """scatter_prefill -> gather reproduces the dense cache exactly, and the
+    gathered view keeps the init_cache tree contract that cache_shardings
+    relies on (no layout change to models/)."""
+    cfg, _ = qwen
+    max_len = 32
+    pool = PagePool(cfg, num_slots=2, max_len=max_len, page_size=8)
+
+    # view template == init_cache eval_shape (structure, shapes, dtypes)
+    ref = jax.eval_shape(lambda: init_cache(cfg, 2, max_len))
+    tmpl = pool.view_template()
+    assert jax.tree_util.tree_structure(ref) == jax.tree_util.tree_structure(tmpl)
+    for a, b in zip(jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(tmpl)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    shardings = cache_shardings(cfg, None, mesh, 2, max_len)
+    for s in jax.tree_util.tree_leaves(shardings):
+        assert isinstance(s, NamedSharding)
+
+    # fill a batch-1 cache with random values and push it through a slot
+    keys = iter(jax.random.split(jax.random.PRNGKey(3), 64))
+    fake = jax.tree_util.tree_map(
+        lambda l: jax.random.normal(next(keys), l.shape, l.dtype)
+        if jnp.issubdtype(l.dtype, jnp.floating)
+        else jnp.zeros(l.shape, l.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, 1, max_len)),
+    )
+    P = 12
+    assert pool.ensure(1, P)
+    pools = pool.scatter_prefill(
+        pool.pools, fake, jnp.asarray(pool.table[1]), jnp.int32(0),
+        jnp.int32(P), P,
+    )
+    resident = pool.update_resident_slot(pool.resident, fake, jnp.int32(1))
+    view = pool.gather(pools, resident, pool.device_table())
+
+    flat_v = jax.tree_util.tree_flatten_with_path(view)[0]
+    flat_f = jax.tree_util.tree_flatten_with_path(fake)[0]
+    for (path, got), (_, want) in zip(flat_v, flat_f):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        lead = 1 if "groups" in names else 0
+        g = np.asarray(jnp.take(got, 1, axis=lead))       # slot 1 row
+        w = np.asarray(jnp.take(want, 0, axis=lead))
+        if names[-1] in ("k", "v") and got.shape[lead + 1] == max_len:
+            # after dropping the batch axis the seq axis sits at `lead`
+            g = np.take(g, np.arange(P), axis=lead)
+            w = np.take(w, np.arange(P), axis=lead)
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# per-slot position vectors (satellite: fused AND einsum paths)
+# ---------------------------------------------------------------------------
+
+
+def _stack_batch(caches):
+    """Concatenate per-sequence batch-1 caches along the batch axis."""
+    flats = [jax.tree_util.tree_flatten_with_path(c)[0] for c in caches]
+    treedef = jax.tree_util.tree_flatten(caches[0])[1]
+    leaves = []
+    for i, (path, _) in enumerate(flats[0]):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        ax = 1 if "groups" in names else 0
+        leaves.append(jnp.concatenate([f[i][1] for f in flats], axis=ax))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@pytest.mark.parametrize("path", ["einsum", "fused"])
+def test_vector_pos_decode_matches_scalar_loop(qwen_compressed, path):
+    """A (B,) position vector decode over ragged sequence lengths produces
+    the same logits as B independent scalar-pos decodes — on both the
+    unpack+einsum fallback and the fused bitlinear kernel path."""
+    cfg, cvals, _ = qwen_compressed
+    if path == "fused":
+        ops.enable_kernels()
+    else:
+        ops.disable_kernels()
+    max_len = 32
+    lens = [3, 5, 8]
+    prompts = _ragged_prompts(cfg, lens, seed=7)
+    prefill = jax.jit(make_prefill(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    seq_caches, toks = [], []
+    for p in prompts:
+        cache = init_cache(cfg, 1, max_len)
+        last, cache = prefill(cvals, {"tokens": jnp.asarray(p)[None]}, cache)
+        seq_caches.append(cache)
+        toks.append(int(jnp.argmax(last[0])))
+
+    stacked = _stack_batch(seq_caches)
+    pos = np.array(lens, np.int32)
+    cur = np.array(toks, np.int32)
+    for _ in range(3):
+        vec_logits, stacked = decode(
+            cvals, jnp.asarray(cur), stacked, jnp.asarray(pos)
+        )
+        ref_rows = []
+        for b in range(len(prompts)):
+            r, seq_caches[b] = decode(
+                cvals, jnp.asarray(cur[b : b + 1]), seq_caches[b], int(pos[b])
+            )
+            ref_rows.append(r)
+        ref = jnp.concatenate(ref_rows, axis=0)
+        np.testing.assert_allclose(
+            np.asarray(vec_logits), np.asarray(ref), rtol=2e-4, atol=2e-4
+        )
+        new = np.asarray(jnp.argmax(vec_logits, axis=-1))
+        assert (new == np.asarray(jnp.argmax(ref, axis=-1))).all()
+        cur, pos = new.astype(np.int32), pos + 1
+
+
+def test_chunked_prefill_matches_full(qwen):
+    """Chunk 8 (no cache) + chunk 4 (attend_cache) == one-shot prefill."""
+    cfg, vals = qwen
+    max_len = 32
+    (p,) = _ragged_prompts(cfg, [12], seed=5)
+    full_last, full_cache = make_prefill(cfg)(
+        vals, {"tokens": jnp.asarray(p)[None]}, init_cache(cfg, 1, max_len)
+    )
+    cache = init_cache(cfg, 1, max_len)
+    first = make_prefill_chunk(cfg, attend_cache=False)
+    cont = make_prefill_chunk(cfg, attend_cache=True)
+    _, cache = first(vals, {"tokens": jnp.asarray(p[:8])[None]}, cache, 0)
+    logits, cache = cont(vals, {"tokens": jnp.asarray(p[8:])[None]}, cache, 8)
+    np.testing.assert_allclose(
+        np.asarray(logits[0, -1]), np.asarray(full_last[0]),
+        rtol=2e-4, atol=2e-4,
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(cache), jax.tree_util.tree_leaves(full_cache)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# scheduler token identity vs the fixed-batch engine
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_identity_dense_ragged_queued(qwen):
+    """More requests than slots, ragged prompts, chunked prefill: every
+    request's tokens match its own batch-1 fixed-batch generation."""
+    cfg, vals = qwen
+    eng = Engine(cfg, vals, max_len=32, batch=1, eos_id=EOS_NEVER)
+    prompts = _ragged_prompts(cfg, [4, 6, 9, 5], seed=1)
+    refs = _reference_rows(eng, prompts, steps=5)
+    sched = Scheduler(eng, num_slots=2, page_size=8, prefill_chunk=8,
+                      max_len=32)
+    assert sched._chunked_prefill
+    got = sched.generate_batch(prompts, max_tokens=5)
+    assert got == refs
+    assert sched.stats.completed == 4
+    assert sched.stats.peak_running <= 2
+    assert sched.pool.pages_in_use == 0  # everything released
+
+
+def test_scheduler_identity_moe_fused(qwen_compressed):
+    """granite-moe through the compressed fused path: the grouped expert
+    kernel serves token-identically under continuous batching.  MoE
+    capacity depends on prefill length, so the scheduler one-shots these
+    prompts (exact-length chunks) instead of pow2 chunking."""
+    cfg = reduced_for_smoke(get_config("granite-moe-1b-a400m"))
+    vals, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+    plan = comp.plan_compression(vals, policy)
+    cvals, artifact = comp.execute_plan(plan, vals, key=jax.random.PRNGKey(0))
+    eng = Engine(cfg, cvals, max_len=32, batch=1, eos_id=EOS_NEVER,
+                 artifact=artifact)
+    assert eng.fused_bitlinear
+    prompts = _ragged_prompts(cfg, [4, 7], seed=2)
+    refs = _reference_rows(eng, prompts, steps=4)
+    sched = Scheduler(eng, num_slots=2, page_size=8, max_len=32)
+    assert not sched._chunked_prefill
+    got = sched.generate_batch(prompts, max_tokens=4)
+    assert got == refs
+
+
+def test_scheduler_eviction_recomputes_identically(qwen):
+    """A pool too small for both sequences forces preemption; the evicted
+    request is recomputed from its prompt and still matches the
+    unconstrained reference."""
+    cfg, vals = qwen
+    eng = Engine(cfg, vals, max_len=32, batch=1, eos_id=EOS_NEVER)
+    prompts = _ragged_prompts(cfg, [10, 12], seed=3)
+    refs = _reference_rows(eng, prompts, steps=8)
+    # each needs pages_needed(12+8)=5 pages of 4; 6 usable -> must preempt
+    sched = Scheduler(eng, num_slots=2, page_size=4, num_pages=7,
+                      prefill_chunk=8, max_len=32)
+    got = sched.generate_batch(prompts, max_tokens=8)
+    assert got == refs
+    assert sched.stats.evictions > 0
+    assert sched.pool.pages_in_use == 0
+
+
+def test_scheduler_submit_validation(qwen):
+    cfg, vals = qwen
+    eng = Engine(cfg, vals, max_len=32, batch=1, eos_id=EOS_NEVER)
+    sched = Scheduler(eng, num_slots=1, page_size=8, num_pages=3, max_len=32)
+    with pytest.raises(ValueError):
+        sched.submit(np.zeros(30, np.int32), max_tokens=8)  # > max_len
+    with pytest.raises(ValueError):
+        sched.submit(np.zeros(20, np.int32), max_tokens=8)  # can never fit pool
+    with pytest.raises(ValueError):
+        sched.submit(np.zeros(4, np.int32), max_tokens=0)
+
+
+# ---------------------------------------------------------------------------
+# engine EOS masking (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_eos_masks_and_pads(qwen):
+    cfg, vals = qwen
+    free = Engine(cfg, vals, max_len=32, batch=1, eos_id=EOS_NEVER)
+    prompts = jnp.asarray(_ragged_prompts(cfg, [6, 6], seed=4))
+    steps = 8
+    ref = np.asarray(free.generate(prompts, steps=steps))
+    eos = int(ref[0, 6 + 2])  # token row 0 emits at step 2 becomes EOS
+    eng = Engine(cfg, vals, max_len=32, batch=2, eos_id=eos)
+    out = np.asarray(eng.generate(prompts, steps=steps))
+    assert out.shape == ref.shape  # rectangular despite early finish
+    for b in range(2):
+        gen = out[b, 6:]
+        hits = np.flatnonzero(gen == eos)
+        if hits.size:
+            first = hits[0]
+            # identical up to and including the first EOS...
+            np.testing.assert_array_equal(gen[: first + 1], ref[b, 6 : 6 + first + 1])
+            # ...then padded with EOS to the end
+            assert (gen[first:] == eos).all()
+        else:
+            np.testing.assert_array_equal(gen, ref[b, 6:])
+    assert (out[0, 6 + 2 :] == eos).all()
+
+
+# ---------------------------------------------------------------------------
+# front end + load generator
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_futures_and_backpressure(qwen):
+    cfg, vals = qwen
+    eng = Engine(cfg, vals, max_len=16, batch=1, eos_id=EOS_NEVER)
+    # 3 usable pages of 4; each request commits pages_needed(4+4)=2, so a
+    # second concurrent submit oversubscribes and must block
+    sched = Scheduler(eng, num_slots=2, page_size=4, num_pages=4,
+                      prefill_chunk=8, max_len=16)
+    prompts = _ragged_prompts(cfg, [4, 4], seed=6)
+    fe = ServeFrontend(sched, auto_start=False)
+    fut0 = fe.submit(prompts[0], max_tokens=4, eos_id=EOS_NEVER)
+    with pytest.raises(TimeoutError):
+        fe.submit(prompts[1], max_tokens=4, eos_id=EOS_NEVER, timeout=0.05)
+    fe.start()
+    r0 = fut0.result(timeout=300)
+    assert len(r0.tokens) == 4
+    fut1 = fe.submit(prompts[1], max_tokens=4, eos_id=EOS_NEVER, timeout=300)
+    assert len(fut1.result(timeout=300).tokens) == 4
+    fe.close()
+    with pytest.raises(RuntimeError):
+        fe.submit(prompts[0], max_tokens=1)
+
+
+def test_frontend_concurrent_submitters_and_load(qwen):
+    cfg, vals = qwen
+    eng = Engine(cfg, vals, max_len=32, batch=1, eos_id=EOS_NEVER)
+    sched = Scheduler(eng, num_slots=2, page_size=8, prefill_chunk=8,
+                      max_len=32)
+    prompts = _ragged_prompts(cfg, [4, 6, 5, 4], seed=8)
+    with ServeFrontend(sched, overcommit=2.0) as fe:
+        results = {}
+
+        def client(i):
+            results[i] = fe.submit(
+                prompts[i], max_tokens=3, eos_id=EOS_NEVER, timeout=300
+            ).result(timeout=300)
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sorted(results) == [0, 1, 2, 3]
+        assert all(len(r.tokens) == 3 for r in results.values())
+
+        res = run_load(fe, prompts, max_tokens=3, qps=50.0, eos_id=EOS_NEVER)
+    assert res.completed == 4
+    assert res.total_tokens == 12
+    assert res.goodput_toks_per_s > 0
+    assert res.p99_latency_s >= res.p50_latency_s >= 0
+    assert 1 <= res.peak_running <= 2
