@@ -18,8 +18,14 @@ tolerance band:
             measured from interleaved timing windows in the same process,
             so machine drift is common-mode and cancels),
   ising     per (solver, n, problems) row: jnp / pallas spin-updates/s,
-  compress  per (method, max_pool_tiles) row: pooled tiles/s
-            (total_tiles / pooled_s — the batched-solve throughput),
+  compress  per (kind, method, max_pool_tiles) row: pooled tiles/s
+            (total_tiles / pooled_s — the batched-solve throughput); the
+            kind="streaming" row gates peak host RSS of a subprocess
+            streaming run (as inverse headroom) and its wall, the
+            kind="probe" row gates the surrogate-vs-exact RD probe
+            speedup, and the kind="plan405b" row gates the metadata-only
+            llama3-405b autotuned plan (peak RSS + probe wall — the
+            "plan 405B on a host that can't hold 405B" demo),
   autotune  per (arch, engine, budget_frac) row: allocator solves/s
             (solve time floored at 50 ms — greedy solves in microseconds
             and the QUBO anneal in ~15 ms, scales where scheduler jitter
@@ -99,10 +105,30 @@ SUITES = {
     "BENCH_compress.json": {
         "suite": "compress",
         "comparable": ("device",),
-        "key": ("method", "max_pool_tiles"),
+        # three row kinds share the file: the pooled-vs-per-tensor rows
+        # (no "kind", keyed by method), kind="streaming" (subprocess
+        # streaming execute under a host-memory budget) and kind="probe"
+        # (surrogate vs exact RD probing); absent fields key as None
+        "key": ("kind", "method", "max_pool_tiles"),
         "metrics": (),
         "derived": {
+            # pooled rows only (others lack the fields -> KeyError -> skip)
             "pooled_tiles_per_s": lambda r: r["total_tiles"] / r["pooled_s"],
+            # streaming + plan405b rows: peak host RSS gated as
+            # higher-is-better headroom (RSS growth past tolerance fails
+            # the gate), walls floored — subprocess startup and scheduler
+            # jitter dominate small configs
+            "stream_rss_headroom": lambda r: 2**30 / r["peak_rss_bytes"],
+            "stream_runs_per_s": lambda r: 1.0 / max(r["stream_wall_s"], 1.0),
+            # plan405b row only: the metadata-only 405B autotune's probe
+            "plan_probes_per_s": lambda r: 1.0 / max(r["probe_s"], 1.0),
+            # probe row: the surrogate's reason to exist is being much
+            # cheaper than exact trial compression; the ratio is measured
+            # in-process on both sides so machine drift is common-mode
+            "probe_speedup_vs_exact": lambda r: r["probe_speedup_vs_exact"],
+            "surrogate_probes_per_s": lambda r: (
+                1.0 / max(r["surrogate_probe_s"], 5e-2)
+            ),
         },
     },
     "BENCH_autotune.json": {

@@ -224,6 +224,10 @@ def bench_compress_suite() -> dict:
         emit(f"compress_{method}_pooled", pooled_s * 1e6,
              f"pools={len(row['pools'])};solver_batches={row['solver_batches']}")
 
+    results.append(_bench_streaming_row())
+    results.append(_bench_probe_row(values, key))
+    results.append(_bench_plan405b_row())
+
     out = {
         "suite": "compress",
         "device": jax.default_backend(),
@@ -234,6 +238,121 @@ def bench_compress_suite() -> dict:
     with open(os.path.abspath(path), "w") as f:
         json.dump(out, f, indent=2)
     return out
+
+
+def _bench_streaming_row() -> dict:
+    """Streaming execute under a 64 MiB host budget, run as a fresh
+    subprocess of the CLI: ru_maxrss is a process-lifetime high-water mark,
+    so the in-process benches above would mask the streaming tier's real
+    footprint.  Gated on peak host RSS (as headroom, higher is better) and
+    stream throughput."""
+    import re
+    import subprocess
+    import sys
+    import tempfile
+
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    env.pop("REPRO_STREAM_KILL_AFTER", None)
+    with tempfile.TemporaryDirectory() as td:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.compress",
+             "--arch", "qwen3-32b", "--reduced", "--streaming",
+             "--method", "alternating", "--stream-budget-mb", "64",
+             "--out-dir", os.path.join(td, "out")],
+            capture_output=True, text=True, cwd=repo, env=env,
+        )
+    if proc.returncode:
+        raise RuntimeError(
+            f"streaming bench subprocess failed:\n{proc.stderr[-2000:]}"
+        )
+    rss = int(re.search(r"^peak_rss_bytes=(\d+)$", proc.stdout, re.M).group(1))
+    wall = float(re.search(r"^stream_wall_s=([\d.]+)$", proc.stdout,
+                           re.M).group(1))
+    row = {
+        "kind": "streaming",
+        "method": "alternating",
+        "max_pool_tiles": "stream",
+        "stream_budget_mb": 64,
+        "peak_rss_bytes": rss,
+        "stream_wall_s": wall,
+    }
+    emit("compress_streaming", wall * 1e6,
+         f"peak_rss_mb={rss / 2**20:.0f};budget_mb=64")
+    return row
+
+
+def _bench_plan405b_row() -> dict:
+    """The ROADMAP acceptance demo as a gated row: autotune a llama3-405b
+    compression plan from metadata alone — ~770 GiB of eligible weights,
+    no tensor ever materialises — in a fresh subprocess, recording its
+    peak host RSS and the synthetic surrogate probe wall-clock."""
+    import re
+    import subprocess
+    import sys
+
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.compress",
+         "--arch", "llama3-405b", "--streaming", "--metadata-only",
+         "--plan-only", "--budget-mb", "200000", "--method", "bbo",
+         "--bbo-iters", "8"],
+        capture_output=True, text=True, cwd=repo, env=env,
+    )
+    if proc.returncode:
+        raise RuntimeError(
+            f"405b plan bench subprocess failed:\n{proc.stderr[-2000:]}"
+        )
+    rss = int(re.search(r"^peak_rss_bytes=(\d+)$", proc.stdout, re.M).group(1))
+    probe = float(re.search(r"^probe_s=([\d.]+)$", proc.stdout, re.M).group(1))
+    row = {
+        "kind": "plan405b",
+        "method": "bbo",
+        "max_pool_tiles": "metadata",
+        "budget_mb": 200000,
+        "peak_rss_bytes": rss,
+        "probe_s": probe,
+    }
+    emit("compress_plan405b", probe * 1e6,
+         f"peak_rss_mb={rss / 2**20:.0f};budget_mb=200000")
+    return row
+
+
+def _bench_probe_row(values, key) -> dict:
+    """Surrogate (SVD-tail) vs exact trial-compression RD probing on the
+    same reduced tree.  Both sides run in this process, so the speedup
+    ratio is common-mode in machine drift; the gate catches the surrogate
+    probe regressing back toward exact-probe cost."""
+    from repro import compression as comp
+    from repro.compression.autotune import probe_tensors
+    from repro.compression.streaming import TreeLeafSource, surrogate_probe
+
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=16, rank_ratio=0.375,
+        min_size=4096,
+    )
+    plan = comp.plan_compression(values, policy)
+    t0 = time.perf_counter()
+    sur = surrogate_probe(TreeLeafSource(values), plan, key=key,
+                          sample_tiles=8)
+    surrogate_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    probe_tensors(values, plan, key=key, max_probe_tiles=8)
+    exact_s = time.perf_counter() - t0
+    row = {
+        "kind": "probe",
+        "method": "surrogate",
+        "max_pool_tiles": "probe",
+        "tensors": len(sur.probes),
+        "surrogate_probe_s": surrogate_s,
+        "exact_probe_s": exact_s,
+        "probe_speedup_vs_exact": exact_s / surrogate_s,
+    }
+    emit("compress_probe_surrogate", surrogate_s * 1e6,
+         f"tensors={row['tensors']};speedup_vs_exact="
+         f"{row['probe_speedup_vs_exact']:.1f}x")
+    return row
 
 
 def bench_bitlinear_suite(fast: bool = False) -> dict:

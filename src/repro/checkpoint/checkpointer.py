@@ -37,6 +37,10 @@ __all__ = [
     "available_steps",
     "save_aux",
     "load_aux",
+    "step_dir",
+    "leaf_entries",
+    "read_leaf_slice",
+    "copy_leaf_files",
 ]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
@@ -120,6 +124,98 @@ def load_aux(directory: str, name: str):
         return None
     with open(path) as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Leaf-granular access (streaming consumers)
+# ---------------------------------------------------------------------------
+#
+# The format stores one .npy file per shard per leaf, which means a reader
+# can address any sub-box of any leaf without assembling the whole tree —
+# the property the streaming compression pipeline
+# (repro.compression.streaming) is built on.  ``read_leaf_slice`` memory-maps
+# the shard files, so only the pages overlapping the requested box are ever
+# resident.
+
+
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def leaf_entries(directory: str, step: int) -> dict:
+    """The step manifest's ``leaves`` table: name -> {shape, dtype, shards}.
+    Metadata only — no tensor data is read."""
+    with open(os.path.join(step_dir(directory, step), "MANIFEST.json")) as f:
+        return json.load(f)["leaves"]
+
+
+def _view_dtype(data: np.ndarray, want: np.dtype) -> np.ndarray:
+    if data.dtype == want:
+        return data
+    # extension dtypes (bfloat16) round-trip as raw bytes, as in restore()
+    if data.dtype.itemsize == want.itemsize:
+        return data.view(want)
+    return data.astype(want)
+
+
+def read_leaf_slice(
+    directory: str, step: int, name: str, index: tuple, entry: dict | None = None
+) -> np.ndarray:
+    """Assemble ``leaf[index]`` (a tuple of slices, one per dim) from the
+    shard files, via mmap — host memory is bounded by the requested box, not
+    the leaf.  ``entry`` short-circuits the manifest read when the caller
+    already holds it."""
+    if entry is None:
+        entry = leaf_entries(directory, step)[name]
+    want = np.dtype(entry["dtype"])
+    box = [
+        (0 if s.start is None else s.start,
+         dim if s.stop is None else min(s.stop, dim))
+        for s, dim in zip(index, entry["shape"])
+    ]
+    out = np.empty([hi - lo for lo, hi in box], dtype=want)
+    path = step_dir(directory, step)
+    for sh in entry["shards"]:
+        # overlap of the shard's box with the requested box
+        ov = [
+            (max(lo, a), min(hi, b))
+            for (lo, hi), (a, b) in zip(box, sh["index"])
+        ]
+        if any(lo >= hi for lo, hi in ov):
+            continue
+        data = np.load(os.path.join(path, sh["file"]), mmap_mode="r")
+        src = tuple(
+            slice(lo - a, hi - a) for (lo, hi), (a, _) in zip(ov, sh["index"])
+        )
+        dst = tuple(
+            slice(lo - blo, hi - blo) for (lo, hi), (blo, _) in zip(ov, box)
+        )
+        out[dst] = _view_dtype(np.asarray(data[src]), want)
+        del data
+    return out
+
+
+def copy_leaf_files(
+    directory: str, step: int, name: str, dst_dir: str, dst_name: str,
+    entry: dict | None = None,
+) -> dict:
+    """File-level copy of one leaf's shards into ``dst_dir`` under a new
+    leaf name; returns the rewritten manifest entry.  Pure I/O — no tensor
+    ever materialises in host memory."""
+    if entry is None:
+        entry = leaf_entries(directory, step)[name]
+    src_dir = step_dir(directory, step)
+    prefix = _safe(name)
+    out = {"shape": entry["shape"], "dtype": entry["dtype"], "shards": []}
+    for sh in entry["shards"]:
+        suffix = sh["file"][len(prefix):] if sh["file"].startswith(prefix) \
+            else "__" + sh["file"]
+        fname = _safe(dst_name) + suffix
+        shutil.copyfile(
+            os.path.join(src_dir, sh["file"]), os.path.join(dst_dir, fname)
+        )
+        out["shards"].append({"file": fname, "index": sh["index"]})
+    return out
 
 
 def _index_to_json(index, shape):

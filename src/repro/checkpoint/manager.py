@@ -5,6 +5,7 @@ from __future__ import annotations
 import concurrent.futures
 import os
 import shutil
+import time
 
 import jax
 
@@ -14,9 +15,20 @@ __all__ = ["CheckpointManager"]
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last: int = 3, async_save: bool = True):
+    #: A ``.tmp`` dir younger than this is treated as another writer's
+    #: in-flight save and left alone by GC (see :meth:`_gc`).
+    STALE_TMP_S = 3600.0
+
+    def __init__(
+        self,
+        directory: str,
+        keep_last: int = 3,
+        async_save: bool = True,
+        stale_tmp_s: float | None = None,
+    ):
         self.directory = directory
         self.keep_last = keep_last
+        self.stale_tmp_s = self.STALE_TMP_S if stale_tmp_s is None else stale_tmp_s
         self._pool = (
             concurrent.futures.ThreadPoolExecutor(max_workers=1) if async_save else None
         )
@@ -67,7 +79,21 @@ class CheckpointManager:
         steps = checkpointer.available_steps(self.directory)
         for s in steps[: -self.keep_last] if self.keep_last else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
-        # remove stale .tmp dirs from crashed saves
+        # Remove stale .tmp dirs from crashed saves — but only stale ones.
+        # The directory may be shared with a second writer (e.g. a streaming
+        # compression job saving its state beside training saves): deleting
+        # *every* .tmp dir would rip out that writer's in-flight save mid
+        # rename-commit.  A crashed save stops touching its tmp dir, so
+        # age-by-mtime separates the two (a live writer keeps the mtime
+        # fresh with every shard file it adds).
+        now = time.time()
         for d in os.listdir(self.directory):
-            if d.endswith(".tmp"):
-                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+            if not d.endswith(".tmp"):
+                continue
+            path = os.path.join(self.directory, d)
+            try:
+                age = now - os.path.getmtime(path)
+            except OSError:
+                continue  # already removed by a concurrent GC
+            if age > self.stale_tmp_s:
+                shutil.rmtree(path, ignore_errors=True)

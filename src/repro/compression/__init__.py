@@ -20,6 +20,12 @@ curves with trial compressions and allocates a global byte budget across
 tensors (greedy water-filling or a QUBO solved on the in-repo Ising
 stack) — ``plan_compression(values, policy, budget_bytes=...)`` returns the
 refined plan.
+
+For checkpoints too large to hold in host memory, the **streaming** tier
+(:mod:`repro.compression.streaming`) runs the same plan/probe/execute
+pipeline leaf-at-a-time: metadata-only planning, SVD-tail surrogate
+probing, and a resumable bounded-memory execute supervised by the
+fault-tolerance substrate.
 """
 
 from repro.compression.artifact import (
@@ -46,6 +52,14 @@ from repro.compression.policy import (
     CompressionPolicy,
     CompressionRule,
 )
+from repro.compression.streaming import (
+    CheckpointLeafSource,
+    TreeLeafSource,
+    execute_streaming,
+    run_compression_job,
+    streaming_autotune_plan,
+    surrogate_probe,
+)
 
 __all__ = [
     "CompressionPolicy",
@@ -64,4 +78,10 @@ __all__ = [
     "autotune_plan",
     "calibration_weights",
     "probe_tensors",
+    "CheckpointLeafSource",
+    "TreeLeafSource",
+    "surrogate_probe",
+    "streaming_autotune_plan",
+    "execute_streaming",
+    "run_compression_job",
 ]

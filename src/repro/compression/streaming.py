@@ -1,0 +1,1040 @@
+"""Streaming, resumable compression of checkpoints larger than host RAM.
+
+``plan_compression``/``execute_plan`` assume the whole values tree is
+resident, and the exact RD probe dominates autotune wall-clock ~1000:1 over
+the allocator solve (BENCH_autotune.json).  Neither survives contact with a
+real 100B+ checkpoint (llama3-405b is ~810 GB of bf16 — no offline host
+holds it), so this module re-states the pipeline around three constraints:
+
+  * **Plan from metadata alone.**  A :class:`TreeLeafSource` over
+    ``jax.eval_shape`` output (or a :class:`CheckpointLeafSource` over a
+    step MANIFEST) yields shapes/dtypes without a single tensor load;
+    ``plan_compression`` already only reads shape/dtype, so planning a 405B
+    model costs megabytes, not terabytes.
+  * **Probe with surrogates, not trial compressions.**
+    :func:`surrogate_probe` estimates each candidate's distortion from the
+    SVD tail of a small deterministic tile subsample (the optimal-rank-K
+    residual is a lower bound for the binary-M decomposition; a per-K
+    inflation factor calibrated by a handful of exact trials closes the
+    gap).  Tensors whose surrogate confidence interval straddles an
+    allocation boundary — i.e. the allocator would pick a different point
+    at distortion ± CI — fall back to exact trial probing of the same
+    subsample.  Metadata-only sources probe synthetic init-distribution
+    tiles instead (exactly the right prior for an untrained checkpoint,
+    and an honest geometric one otherwise).
+  * **Execute under a bounded host budget, resumably.**
+    :func:`execute_streaming` walks the checkpoint one leaf at a time,
+    reads tile bands through memory-mapped shard files
+    (``checkpointer.read_leaf_slice``), solves in chunks sized by
+    ``REPRO_STREAM_BUDGET_BYTES`` (BBO chunks additionally bounded by the
+    PR 6 surrogate-memory model, :func:`repro.compression.execute.auto_pool_chunk`),
+    and writes compressed leaves straight into the output step directory
+    via ``np.lib.format.open_memmap``.  Job state (completed tensors +
+    partial manifest) checkpoints through ``save_aux`` after every leaf, a
+    :class:`~repro.distributed.fault_tolerance.Heartbeat` exposes liveness,
+    and :func:`run_compression_job` supervises with ``run_with_restarts``
+    — a killed job resumes mid-model and produces a manifest byte-identical
+    to an uninterrupted run (tests/test_streaming.py locks this).
+
+Determinism contract: per-tile PRNG keys use execute's exact
+``fold_in(leaf_index) -> per-slice fold -> split-over-tiles`` chain, so
+greedy/alternating streaming output is bit-identical to in-memory
+``execute_plan`` on the same plan+seed.  BBO tensors are deterministic per
+(plan, seed, stream budget) but solve per-tensor chunks rather than
+cross-tensor pools, so they match a pooled execute only in expectation —
+the same caveat pooling itself carries vs the legacy walk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import resource
+import shutil
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.checkpoint.checkpointer import _safe
+from repro.compression.artifact import CompressionArtifact, MANIFEST_FORMAT
+from repro.compression.autotune.allocate import allocate_budget
+from repro.compression.autotune.probe import (
+    DEFAULT_K_FRACTIONS,
+    ProbeResult,
+    RDPoint,
+    _probe_indices,
+    candidate_settings,
+)
+from repro.compression.autotune.refine import (
+    AutotuneResult,
+    _verify_refined,
+    allocation_rules,
+)
+from repro.compression.execute import auto_pool_chunk
+from repro.compression.plan import CompressionPlan, TensorPlan, plan_compression, tree_paths
+from repro.core import decomposition as dec
+from repro.core.compress import compress_tile_batch
+from repro.distributed.fault_tolerance import Heartbeat, run_with_restarts
+
+__all__ = [
+    "CheckpointLeafSource",
+    "TreeLeafSource",
+    "surrogate_probe",
+    "SurrogateProbe",
+    "streaming_autotune_plan",
+    "execute_streaming",
+    "run_compression_job",
+    "STREAM_BUDGET_ENV",
+    "STATE_NAME",
+]
+
+#: Host-memory budget for the streaming execute path: bounds the dense tile
+#: chunk per batched solve (with headroom for the solver state, the band
+#: buffer and the device copy).  NOT the checkpoint size — output writes go
+#: through npy memmaps and reads through mmap'd shards.
+STREAM_BUDGET_ENV = "REPRO_STREAM_BUDGET_BYTES"
+_DEFAULT_STREAM_BUDGET = 1 << 30
+
+#: Job-state aux document (saved beside the step dirs via ``save_aux``).
+STATE_NAME = "stream_state.json"
+STATE_FORMAT = "repro.compression.stream/v1"
+
+#: Test/CI fault injection: SIGKILL the process after completing this many
+#: leaves in the current run (0/unset = never).  Used by the kill-and-resume
+#: smoke to simulate a mid-job crash deterministically.
+KILL_AFTER_ENV = "REPRO_STREAM_KILL_AFTER"
+
+_STREAM_SALT = 0x73747265   # "stre": per-tensor BBO refinement seed domain
+_SYNTH_SALT = 0x73796E74    # "synt": synthetic-tile draw domain
+_FACTOR_CLIP = (1.0, 1e3)   # binary-M residual >= SVD tail, and a near-zero
+                            # tail must not explode the inflation estimate
+
+
+def stream_budget_bytes(budget_bytes: int | None = None) -> int:
+    if budget_bytes is not None:
+        return int(budget_bytes)
+    return int(os.environ.get(STREAM_BUDGET_ENV, _DEFAULT_STREAM_BUDGET))
+
+
+def peak_rss_bytes() -> int:
+    """Process-lifetime peak resident set (linux ru_maxrss is KiB)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+# ---------------------------------------------------------------------------
+# Leaf sources
+# ---------------------------------------------------------------------------
+
+
+class CheckpointLeafSource:
+    """Leaf-granular view of a saved checkpoint step: metadata from the step
+    MANIFEST, tensor data through memory-mapped shard reads — the whole tree
+    is never resident.  ``prefix`` selects the params subtree (training
+    checkpoints save ``{"step", "params", "opt"}``; compression output saves
+    ``{"params"}``)."""
+
+    data_available = True
+
+    def __init__(self, directory: str, step: int | None = None,
+                 prefix: str = "params"):
+        if step is None:
+            step = checkpointer.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint steps in {directory!r}")
+        self.directory, self.step, self.prefix = directory, int(step), prefix
+        pre = prefix + "/" if prefix else ""
+        self.leaves = {
+            name[len(pre):]: e
+            for name, e in checkpointer.leaf_entries(directory, self.step).items()
+            if name.startswith(pre)
+        }
+        if not self.leaves:
+            raise ValueError(
+                f"checkpoint {directory!r} step {self.step} has no leaves "
+                f"under prefix {prefix!r}"
+            )
+
+    def describe(self) -> str:
+        return f"checkpoint:{self.directory}@{self.step}"
+
+    def _full(self, path: str) -> str:
+        return f"{self.prefix}/{path}" if self.prefix else path
+
+    def template(self):
+        """Nested ShapeDtypeStruct tree over the params subtree.  Dict keys
+        flatten in sorted order, matching the order the (all-dict) model
+        values trees flatten in — so ``leaf_index`` agrees with an
+        in-memory plan of the same tree."""
+        tree: dict = {}
+        for path, e in self.leaves.items():
+            node = tree
+            parts = path.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jax.ShapeDtypeStruct(
+                tuple(e["shape"]), np.dtype(e["dtype"])
+            )
+        return tree
+
+    def read_band(self, path: str, g: int, r0: int, r1: int) -> np.ndarray:
+        """Rows [r0, r1) of group-slice ``g`` as (r1-r0, d_out) float32.
+        Host cost is the band, not the leaf (mmap'd shard pages)."""
+        e = self.leaves[path]
+        shape = e["shape"]
+        lead = shape[:-2]
+        idx = np.unravel_index(g, lead) if lead else ()
+        index = tuple(slice(int(x), int(x) + 1) for x in idx) + (
+            slice(r0, r1), slice(None),
+        )
+        arr = checkpointer.read_leaf_slice(
+            self.directory, self.step, self._full(path), index, entry=e
+        )
+        return arr.reshape(r1 - r0, shape[-1]).astype(np.float32)
+
+    def copy_leaf(self, path: str, dst_dir: str, dst_name: str) -> dict:
+        entry = checkpointer.copy_leaf_files(
+            self.directory, self.step, self._full(path), dst_dir, dst_name,
+            entry=self.leaves[path],
+        )
+        return {dst_name: entry}
+
+
+class TreeLeafSource:
+    """In-memory (or metadata-only) source over a values tree.  Leaves may
+    be concrete arrays — the small-model / test path, and the adapter for
+    values that already live in RAM — or ``jax.ShapeDtypeStruct``s (e.g.
+    from ``jax.eval_shape(init_model)``), in which case only planning and
+    synthetic surrogate probing are possible."""
+
+    def __init__(self, tree):
+        self._tree = tree
+        self.leaves = dict(tree_paths(tree))
+        self.data_available = not any(
+            isinstance(l, jax.ShapeDtypeStruct) for l in self.leaves.values()
+        )
+        self._np_cache: dict = {}
+
+    def describe(self) -> str:
+        return "tree:" + ("values" if self.data_available else "metadata-only")
+
+    def template(self):
+        return self._tree
+
+    def _np_leaf(self, path: str) -> np.ndarray:
+        if path not in self._np_cache:
+            leaf = self.leaves[path]
+            if isinstance(leaf, jax.ShapeDtypeStruct):
+                raise ValueError(
+                    f"metadata-only source holds no data for {path!r} "
+                    "(plan/synthetic-probe only)"
+                )
+            arr = np.asarray(jax.device_get(leaf))
+            self._np_cache[path] = arr.reshape(-1, *arr.shape[-2:])
+        return self._np_cache[path]
+
+    def read_band(self, path: str, g: int, r0: int, r1: int) -> np.ndarray:
+        return self._np_leaf(path)[g, r0:r1, :].astype(np.float32)
+
+    def copy_leaf(self, path: str, dst_dir: str, dst_name: str) -> dict:
+        arr = np.asarray(jax.device_get(self.leaves[path]))
+        fname = _safe(dst_name) + "__shard0_0.npy"
+        np.save(os.path.join(dst_dir, fname), arr)
+        entry = {
+            "shape": list(arr.shape),
+            "dtype": str(self.leaves[path].dtype),
+            "shards": [
+                {"file": fname, "index": [[0, int(s)] for s in arr.shape]}
+            ],
+        }
+        return {dst_name: entry}
+
+
+# ---------------------------------------------------------------------------
+# Tile access in canonical order
+# ---------------------------------------------------------------------------
+
+
+def _gather_tiles(source, t: TensorPlan, idx) -> np.ndarray:
+    """Tiles at sorted global indices (execute's canonical g-major, then
+    row-major (r, c) order) as (m, tn, td) float32, reading one row band at
+    a time."""
+    tn, td = t.tile_n, t.tile_d
+    r, c = t.d_in // tn, t.d_out // td
+    per_slice = r * c
+    out = np.empty((len(idx), tn, td), np.float32)
+    band_key, band = None, None
+    for j, gi in enumerate(np.asarray(idx)):
+        g, rem = divmod(int(gi), per_slice)
+        i, col = divmod(rem, c)
+        if band_key != (g, i):
+            band = source.read_band(t.path, g, i * tn, (i + 1) * tn)
+            band_key = (g, i)
+        out[j] = band[:, col * td:(col + 1) * td]
+    return out
+
+
+def _keys_at(key, t: TensorPlan, idx):
+    """Per-tile PRNG keys at sorted global indices — execute's
+    ``_tensor_keys`` derivation, materialising one slice's keys at a time."""
+    base = jax.random.fold_in(key, t.leaf_index)
+    per_slice = t.num_tiles // t.groups
+    out, cur_g, skeys = [], None, None
+    for gi in np.asarray(idx):
+        g, rem = divmod(int(gi), per_slice)
+        if g != cur_g:
+            sk = jax.random.fold_in(base, g) if len(t.shape) > 2 else base
+            skeys = jax.random.split(sk, per_slice)
+            cur_g = g
+        out.append(skeys[rem])
+    return jnp.stack(out)
+
+
+def _iter_chunks(source, t: TensorPlan, key, chunk: int):
+    """Yield (start, tiles (m, tn, td) float32, keys (m,)) chunks in
+    canonical tile order.  Peak host footprint is one chunk plus one row
+    band plus one slice's keys — never the tensor."""
+    tn, td = t.tile_n, t.tile_d
+    r, c = t.d_in // tn, t.d_out // td
+    base = jax.random.fold_in(key, t.leaf_index)
+    buf_t, buf_k, n, start = [], [], 0, 0
+    for g in range(t.groups):
+        sk = jax.random.fold_in(base, g) if len(t.shape) > 2 else base
+        skeys = jax.random.split(sk, r * c)
+        for i in range(r):
+            band = source.read_band(t.path, g, i * tn, (i + 1) * tn)
+            tiles = np.ascontiguousarray(
+                band.reshape(tn, c, td).transpose(1, 0, 2)
+            )
+            pos = 0
+            while pos < c:
+                take = min(chunk - n, c - pos)
+                buf_t.append(tiles[pos:pos + take])
+                buf_k.append(skeys[i * c + pos:i * c + pos + take])
+                n += take
+                pos += take
+                if n == chunk:
+                    yield start, np.concatenate(buf_t), jnp.concatenate(buf_k)
+                    start += n
+                    buf_t, buf_k, n = [], [], 0
+    if n:
+        yield start, np.concatenate(buf_t), jnp.concatenate(buf_k)
+
+
+def _synthetic_tiles(key, t: TensorPlan, n: int) -> np.ndarray:
+    """Init-distribution sample tiles for a metadata-only source: truncated
+    normal at the fan-in scale ``models.params.dense_init`` uses.  For an
+    untrained checkpoint this is the *exact* data distribution; for a
+    trained one it is a geometry-honest prior whose error the CI fallback
+    accounts for."""
+    k = jax.random.fold_in(jax.random.fold_in(key, _SYNTH_SALT), t.leaf_index)
+    k = jax.random.fold_in(jax.random.fold_in(k, t.tile_n), t.tile_d)
+    scale = float(t.d_in) ** -0.5
+    tiles = scale * jax.random.truncated_normal(
+        k, -2.0, 2.0, (n, t.tile_n, t.tile_d), jnp.float32
+    )
+    return np.asarray(tiles)
+
+
+def _sample_indices(key, t: TensorPlan, ct: TensorPlan, n: int) -> np.ndarray:
+    idx = _probe_indices(key, t, ct, n)
+    if idx is None:
+        return np.arange(ct.num_tiles)
+    return np.asarray(idx)
+
+
+# ---------------------------------------------------------------------------
+# Surrogate probing (SVD tails + calibrated inflation)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateProbe:
+    """Surrogate RD curves, allocator-compatible, plus per-point confidence
+    intervals the boundary-fallback logic consumes."""
+
+    probes: tuple          # ProbeResult per tensor, plan order
+    cis: dict              # (path, tile_n, tile_d, K) -> 95% CI on distortion
+    factors: tuple         # ((K/tile_n, inflation), ...) calibration table
+    sample_tiles: int
+    mode: str              # "data" | "synthetic"
+
+
+def _svd_tails(tiles: np.ndarray, kmax: int) -> np.ndarray:
+    """(m, kmax+1): column K holds each tile's optimal rank-K squared
+    residual (sum of squared singular values beyond the first K)."""
+    s2 = np.linalg.svd(tiles.astype(np.float64), compute_uv=False) ** 2
+    rev = np.cumsum(s2[:, ::-1], axis=1)[:, ::-1]
+    out = np.zeros((tiles.shape[0], kmax + 1), np.float64)
+    q = min(s2.shape[1], kmax + 1)
+    out[:, :q] = rev[:, :q]
+    return out
+
+
+def _factor_at(factors, frac: float) -> float:
+    xs = np.array([f[0] for f in factors])
+    ys = np.array([f[1] for f in factors])
+    return float(np.interp(frac, xs, ys))
+
+
+def _calibrate_factors(
+    source, plan: CompressionPlan, key, sample_tiles: int,
+    k_fractions, probe_bbo_iters, backend, synthetic: bool,
+):
+    """Per-K-fraction inflation of the SVD tail to the binary-M residual,
+    measured by exact trial compressions of ONE tensor's sample tiles (the
+    tensor with the most tiles — the most load-bearing estimate).  A few
+    solves on <= ``sample_tiles`` tiles: negligible next to even one full
+    trial-compression probe."""
+    cal = max(plan.tensors, key=lambda t: (t.num_tiles, t.path))
+    cands = candidate_settings(cal, tuple(k_fractions), 1)
+    ct0 = cands[0]
+    if synthetic:
+        # no data to index into — draw the sample directly (and skip the
+        # subsample permutation, which scales with num_tiles)
+        m = min(sample_tiles, ct0.num_tiles)
+        tiles = _synthetic_tiles(key, ct0, m)
+        keys = jax.random.split(jax.random.fold_in(key, _SYNTH_SALT), m)
+    else:
+        idx = _sample_indices(key, cal, ct0, sample_tiles)
+        tiles = _gather_tiles(source, ct0, idx)
+        keys = _keys_at(key, ct0, idx)
+    tails = _svd_tails(tiles, cal.tile_n)
+    norms2 = np.sum(tiles.astype(np.float64) ** 2, axis=(1, 2))
+    pool_key = jax.random.fold_in(jax.random.fold_in(key, _STREAM_SALT), 0)
+    factors = []
+    for ct in cands:
+        iters = min(ct.bbo_iters, probe_bbo_iters) if (
+            probe_bbo_iters and ct.method == "bbo"
+        ) else ct.bbo_iters
+        _, _, errs = compress_tile_batch(
+            jnp.asarray(tiles), keys, jax.random.fold_in(pool_key, ct.K),
+            ct.K, ct.method, bbo_iters=max(iters, 1), backend=backend,
+        )
+        exact = float(np.mean(np.asarray(errs, np.float64) ** 2 * norms2))
+        svd = float(np.mean(tails[:, ct.K]))
+        f = exact / svd if svd > 0 else _FACTOR_CLIP[1]
+        factors.append(
+            (ct.K / ct.tile_n, float(np.clip(f, *_FACTOR_CLIP)))
+        )
+    factors.sort()
+    return tuple(factors)
+
+
+def surrogate_probe(
+    source,
+    plan: CompressionPlan,
+    *,
+    key=None,
+    weights: dict | None = None,
+    sample_tiles: int = 8,
+    k_fractions: tuple = DEFAULT_K_FRACTIONS,
+    tile_d_choices: int = 1,
+    probe_bbo_iters: int | None = 8,
+    backend: str | None = None,
+    verbose: bool = False,
+) -> SurrogateProbe:
+    """Fit per-tensor RD curves WITHOUT trial-compressing every candidate:
+    per (tensor, geometry), read ``sample_tiles`` tiles (mmap'd bands for a
+    checkpoint source; synthetic init-distribution tiles for metadata-only
+    sources) and take each candidate K's distortion as the mean SVD-tail
+    residual, inflated by the calibrated binary-M factor.  One SVD sweep
+    per geometry replaces a trial compression per (geometry, K) — the
+    probe-dominates-solve wall-clock inversion this module exists for."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    backend = backend or plan.policy.solver_backend
+    weights = weights or {}
+    synthetic = not source.data_available
+    factors = _calibrate_factors(
+        source, plan, key, sample_tiles, k_fractions, probe_bbo_iters,
+        backend, synthetic,
+    )
+    probes, cis = [], {}
+    for t in plan.tensors:
+        pts = [
+            RDPoint(tile_n=0, tile_d=0, K=0, bytes=int(t.orig_bytes),
+                    distortion=0.0)
+        ]
+        geom_cache: dict = {}
+        for ct in candidate_settings(t, tuple(k_fractions), tile_d_choices):
+            gk = (ct.tile_n, ct.tile_d)
+            if gk not in geom_cache:
+                if synthetic:
+                    tiles = _synthetic_tiles(
+                        key, ct, min(sample_tiles, ct.num_tiles)
+                    )
+                else:
+                    idx = _sample_indices(key, t, ct, sample_tiles)
+                    tiles = _gather_tiles(source, ct, idx)
+                geom_cache[gk] = (
+                    tiles.shape[0], _svd_tails(tiles, ct.tile_n)
+                )
+            m, tails = geom_cache[gk]
+            f = _factor_at(factors, ct.K / ct.tile_n)
+            w = float(weights.get(t.path, 1.0))
+            scale = ct.num_tiles * f * w
+            tail = tails[:, ct.K]
+            d = float(np.mean(tail)) * scale
+            ci = (
+                1.96 * float(np.std(tail, ddof=1)) / math.sqrt(m) * scale
+                if m > 1 else d
+            )
+            pts.append(
+                RDPoint(tile_n=ct.tile_n, tile_d=ct.tile_d, K=ct.K,
+                        bytes=int(ct.pred_bytes), distortion=d)
+            )
+            cis[(t.path, ct.tile_n, ct.tile_d, ct.K)] = ci
+        pts.sort(key=lambda p: (p.bytes, p.distortion))
+        probes.append(
+            ProbeResult(
+                path=t.path, orig_bytes=t.orig_bytes,
+                weight=float(weights.get(t.path, 1.0)), points=tuple(pts),
+            )
+        )
+        if verbose:
+            print(f"  surrogate {t.path}: {len(pts) - 1} candidates from "
+                  f"{sample_tiles}-tile SVD sample")
+    return SurrogateProbe(
+        probes=tuple(probes), cis=cis, factors=factors,
+        sample_tiles=sample_tiles, mode="synthetic" if synthetic else "data",
+    )
+
+
+def _exact_probe_tensor(
+    source, t: TensorPlan, key, *, weights, sample_tiles, k_fractions,
+    tile_d_choices, probe_bbo_iters, backend,
+) -> ProbeResult:
+    """Exact trial-compression curve for ONE tensor on the same
+    deterministic subsample the surrogate measured — the fallback for
+    tensors whose surrogate CI straddles an allocation boundary."""
+    w = float((weights or {}).get(t.path, 1.0))
+    pts = [
+        RDPoint(tile_n=0, tile_d=0, K=0, bytes=int(t.orig_bytes),
+                distortion=0.0)
+    ]
+    geom_cache: dict = {}
+    base = jax.random.fold_in(jax.random.fold_in(key, _STREAM_SALT),
+                              t.leaf_index)
+    for ct in candidate_settings(t, tuple(k_fractions), tile_d_choices):
+        gk = (ct.tile_n, ct.tile_d)
+        if gk not in geom_cache:
+            idx = _sample_indices(key, t, ct, sample_tiles)
+            tiles = _gather_tiles(source, ct, idx)
+            geom_cache[gk] = (
+                jnp.asarray(tiles),
+                _keys_at(key, ct, idx),
+                np.sum(tiles.astype(np.float64) ** 2, axis=(1, 2)),
+            )
+        tiles, keys, norms2 = geom_cache[gk]
+        iters = min(ct.bbo_iters, probe_bbo_iters) if (
+            probe_bbo_iters and ct.method == "bbo"
+        ) else ct.bbo_iters
+        _, _, errs = compress_tile_batch(
+            tiles, keys, jax.random.fold_in(base, ct.K), ct.K, ct.method,
+            bbo_iters=max(iters, 1), backend=backend,
+        )
+        resid2 = float(np.mean(np.asarray(errs, np.float64) ** 2 * norms2))
+        pts.append(
+            RDPoint(tile_n=ct.tile_n, tile_d=ct.tile_d, K=ct.K,
+                    bytes=int(ct.pred_bytes),
+                    distortion=resid2 * ct.num_tiles * w)
+        )
+    pts.sort(key=lambda p: (p.bytes, p.distortion))
+    return ProbeResult(path=t.path, orig_bytes=t.orig_bytes, weight=w,
+                       points=tuple(pts))
+
+
+def _shift_probes(probes, cis, sign: float):
+    out = []
+    for p in probes:
+        pts = tuple(
+            pt if pt.dense else dataclasses.replace(
+                pt,
+                distortion=max(
+                    pt.distortion
+                    + sign * cis.get((p.path, pt.tile_n, pt.tile_d, pt.K), 0.0),
+                    0.0,
+                ),
+            )
+            for pt in p.points
+        )
+        out.append(dataclasses.replace(p, points=pts))
+    return out
+
+
+def streaming_autotune_plan(
+    source,
+    policy,
+    budget_bytes: int,
+    *,
+    key=None,
+    engine: str = "greedy",
+    sample_tiles: int = 8,
+    k_fractions: tuple | None = None,
+    tile_d_choices: int = 1,
+    probe_bbo_iters: int | None = 8,
+    exact_fallback: bool = True,
+    backend: str | None = None,
+    num_sweeps: int = 96,
+    num_reads: int = 8,
+    verbose: bool = False,
+) -> AutotuneResult:
+    """Autotune a plan to ``budget_bytes`` without loading the model: plan
+    from the source's metadata, probe with SVD-tail surrogates, allocate,
+    and exact-probe only the tensors whose surrogate CI straddles an
+    allocation boundary (skipped — and recorded — when the source is
+    metadata-only).  Returns the same :class:`AutotuneResult` shape as
+    ``autotune_plan``; the plan's ``autotune.probe`` block records the
+    surrogate mode, calibration factors and fallback set."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    fracs = DEFAULT_K_FRACTIONS if k_fractions is None else tuple(k_fractions)
+    template = source.template()
+    base_plan = plan_compression(template, policy)
+    if not base_plan.tensors:
+        raise ValueError(
+            "streaming autotune: the base policy plans no tensors"
+        )
+    t0 = time.perf_counter()
+    sur = surrogate_probe(
+        source, base_plan, key=key, sample_tiles=sample_tiles,
+        k_fractions=fracs, tile_d_choices=tile_d_choices,
+        probe_bbo_iters=probe_bbo_iters, backend=backend, verbose=verbose,
+    )
+
+    # Allocation-boundary sensitivity: if shifting every surrogate curve to
+    # the low/high end of its CI changes a tensor's chosen point, the
+    # surrogate cannot rank that tensor's candidates reliably — probe it
+    # exactly (same subsample) before committing bytes to it.
+    lo = allocate_budget(_shift_probes(sur.probes, sur.cis, -1.0),
+                         budget_bytes, engine="greedy")
+    hi = allocate_budget(_shift_probes(sur.probes, sur.cis, +1.0),
+                         budget_bytes, engine="greedy")
+    boundary = sorted(
+        path for path in lo.choices
+        if (lo.choices[path].tile_n, lo.choices[path].tile_d,
+            lo.choices[path].K)
+        != (hi.choices[path].tile_n, hi.choices[path].tile_d,
+            hi.choices[path].K)
+    )
+    probes = list(sur.probes)
+    exact_probed = []
+    if boundary and exact_fallback and source.data_available:
+        by_path = {t.path: i for i, t in enumerate(base_plan.tensors)}
+        for path in boundary:
+            i = by_path[path]
+            probes[i] = _exact_probe_tensor(
+                source, base_plan.tensors[i], key, weights=None,
+                sample_tiles=sample_tiles, k_fractions=fracs,
+                tile_d_choices=tile_d_choices,
+                probe_bbo_iters=probe_bbo_iters, backend=backend,
+            )
+            exact_probed.append(path)
+        if verbose:
+            print(f"  exact fallback: {len(exact_probed)} boundary tensor(s)")
+    probe_s = time.perf_counter() - t0
+
+    allocation = allocate_budget(
+        probes, budget_bytes, engine=engine, key=key,
+        backend=backend or policy.solver_backend,
+        num_sweeps=num_sweeps, num_reads=num_reads,
+    )
+    refined_policy = dataclasses.replace(
+        policy,
+        rules=allocation_rules(allocation, base_plan) + tuple(policy.rules),
+    )
+    refined = plan_compression(template, refined_policy)
+    _verify_refined(refined, allocation, base_plan)
+    metadata = {
+        "budget_bytes": int(budget_bytes),
+        "engine": allocation.engine,
+        "predicted_bytes": allocation.total_bytes,
+        "predicted_distortion": allocation.total_distortion,
+        "calibrated": False,
+        "probe": {
+            "mode": "surrogate",
+            "source": sur.mode,
+            "sample_tiles": sample_tiles,
+            "factors": [list(f) for f in sur.factors],
+            "boundary": boundary,
+            "exact_fallback": exact_probed,
+        },
+        "allocation": {
+            path: pt.to_dict()
+            for path, pt in sorted(allocation.choices.items())
+        },
+    }
+    refined = dataclasses.replace(refined, autotune=metadata)
+    return AutotuneResult(
+        plan=refined, policy=refined_policy, allocation=allocation,
+        probes=tuple(probes), weights=None, probe_s=probe_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming execute (bounded memory, resumable)
+# ---------------------------------------------------------------------------
+
+
+def _fingerprint(plan: CompressionPlan, key, backend: str, budget: int) -> str:
+    """Resume guard: job state only applies to the exact (plan, seed,
+    backend, budget) that produced it — the budget sizes the BBO chunk
+    boundaries, which are part of BBO's determinism contract."""
+    try:
+        key_bytes = np.asarray(jax.random.key_data(key)).tobytes()
+    except Exception:  # old-style uint32 keys
+        key_bytes = np.asarray(key).tobytes()
+    h = hashlib.sha256()
+    h.update(plan.to_json(indent=None).encode())
+    h.update(key_bytes)
+    h.update(backend.encode())
+    h.update(str(int(budget)).encode())
+    return h.hexdigest()
+
+
+def _tensor_chunk_tiles(t: TensorPlan, budget: int) -> int:
+    """Tiles per batched solve for one tensor: the stream budget divided by
+    the dense tile footprint with 8x headroom (chunk buffer, device copy,
+    solver temporaries, band buffer, output flush); BBO additionally bounded
+    by the PR 6 surrogate-memory chunker so the lock-step state stays
+    cache-adjacent."""
+    tile_bytes = 4 * t.tile_n * t.tile_d
+    chunk = max(1, budget // (8 * tile_bytes))
+    if t.method == "bbo":
+        chunk = min(chunk, auto_pool_chunk(t.num_tiles, t.tile_n, t.K,
+                                           t.bbo_iters))
+    return int(min(chunk, t.num_tiles))
+
+
+def _compress_tensor_streaming(
+    source, t: TensorPlan, key, backend: str, budget: int, tmp_dir: str,
+    dst: str, verbose: bool,
+):
+    """Stream one tensor: mmap'd band reads -> chunked batched solves ->
+    npy-memmap writes of the packed output.  Returns (manifest tensor
+    entry, {leaf name: checkpoint entry})."""
+    tn, td, K = t.tile_n, t.tile_d, t.K
+    r, c = t.d_in // tn, t.d_out // td
+    lead = list(t.shape[:-2])
+    kb = (K + 7) // 8
+    mp_name, c_name = f"{dst}/m_packed", f"{dst}/C"
+    mp_file = _safe(mp_name) + "__shard0_0.npy"
+    c_file = _safe(c_name) + "__shard0_0.npy"
+    out_dtype = np.dtype(t.dtype)
+    mp_shape = (*lead, r, c, tn, kb)
+    c_shape = (*lead, r, c, K, td)
+    mp = np.lib.format.open_memmap(
+        os.path.join(tmp_dir, mp_file), mode="w+", dtype=np.uint8,
+        shape=mp_shape,
+    )
+    Cm = np.lib.format.open_memmap(
+        os.path.join(tmp_dir, c_file), mode="w+", dtype=out_dtype,
+        shape=c_shape,
+    )
+    mp_flat = mp.reshape(-1, tn, kb)
+    c_flat = Cm.reshape(-1, K, td)
+    chunk = _tensor_chunk_tiles(t, budget)
+    bbo_key = jax.random.fold_in(jax.random.fold_in(key, _STREAM_SALT),
+                                 t.leaf_index)
+    cast = jnp.dtype(t.dtype)
+    err_sum, nt, chunk_sizes = 0.0, 0, []
+    for ci, (start, tiles, keys) in enumerate(_iter_chunks(source, t, key,
+                                                           chunk)):
+        M, C, errs = compress_tile_batch(
+            jnp.asarray(tiles), keys, jax.random.fold_in(bbo_key, ci), K,
+            t.method, bbo_iters=max(t.bbo_iters, 1), backend=backend,
+        )
+        packed = np.asarray(jax.vmap(dec.pack_bits)(M))
+        m = packed.shape[0]
+        mp_flat[start:start + m] = packed
+        c_flat[start:start + m] = np.asarray(C.astype(cast))
+        err_sum += float(jnp.sum(errs))
+        nt += m
+        chunk_sizes.append(m)
+    mp.flush()
+    Cm.flush()
+    nb = int(mp.nbytes + Cm.nbytes)
+    err = err_sum / max(nt, 1)
+    del mp, Cm, mp_flat, c_flat
+    entry = {
+        "shape": list(t.shape),
+        "dtype": t.dtype,
+        "groups": t.groups,
+        "group_dims": lead,
+        "tile_n": tn,
+        "tile_d": td,
+        "K": K,
+        "method": t.method,
+        "rule": t.rule,
+        "num_tiles": t.num_tiles,
+        "orig_bytes": t.orig_bytes,
+        "new_bytes": nb,
+        "rel_err": err,
+        "m_packed": {"shape": list(mp_shape), "dtype": "uint8"},
+        "C": {"shape": list(c_shape), "dtype": t.dtype},
+        "stream": {"chunk": chunk, "chunk_sizes": chunk_sizes},
+    }
+    leaves = {
+        mp_name: {
+            "shape": list(mp_shape), "dtype": "uint8",
+            "shards": [{"file": mp_file,
+                        "index": [[0, int(s)] for s in mp_shape]}],
+        },
+        c_name: {
+            "shape": list(c_shape), "dtype": t.dtype,
+            "shards": [{"file": c_file,
+                        "index": [[0, int(s)] for s in c_shape]}],
+        },
+    }
+    if verbose:
+        print(f"  [stream] {t.path}: {t.num_tiles} tiles in "
+              f"{len(chunk_sizes)} chunk(s) of <= {chunk}, "
+              f"x{t.orig_bytes / max(nb, 1):.1f}, rel_err {err:.3f}")
+    return entry, leaves
+
+
+def _fresh_state(fp: str) -> dict:
+    return {
+        "format": STATE_FORMAT,
+        "fingerprint": fp,
+        "completed": {},
+        "dense": {},
+        "leaves": {},
+    }
+
+
+def _state_complete(state: dict, paths, planned: dict) -> bool:
+    return all(
+        (p in state["completed"]) if p in planned else (p in state["dense"])
+        for p, _ in paths
+    )
+
+
+def execute_streaming(
+    source,
+    plan: CompressionPlan,
+    out_dir: str,
+    *,
+    key=None,
+    backend: str | None = None,
+    budget_bytes: int | None = None,
+    state_every: int = 1,
+    heartbeat: Heartbeat | None = None,
+    step: int = 0,
+    verbose: bool = False,
+):
+    """Execute ``plan`` over ``source`` one leaf at a time under the stream
+    budget, writing a restorable compressed checkpoint + manifest to
+    ``out_dir``.  Resumable: job state checkpoints via ``save_aux`` after
+    every ``state_every`` leaves, and a rerun with the same (plan, seed,
+    backend, budget) skips completed leaves — the final manifest is
+    byte-identical whether or not the job was interrupted.  Returns
+    (artifact, stats dict)."""
+    if not getattr(source, "data_available", False):
+        raise ValueError(
+            "execute_streaming needs tensor data; this source is "
+            "metadata-only (plan/probe only)"
+        )
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    backend = backend or plan.policy.solver_backend
+    budget = stream_budget_bytes(budget_bytes)
+    os.makedirs(out_dir, exist_ok=True)
+    final = checkpointer.step_dir(out_dir, step)
+    tmp = final + ".tmp"
+
+    template = source.template()
+    paths = tree_paths(template)
+    planned = {t.path: t for t in plan.tensors}
+    fp = _fingerprint(plan, key, backend, budget)
+
+    state = checkpointer.load_aux(out_dir, STATE_NAME)
+    if not (
+        isinstance(state, dict)
+        and state.get("format") == STATE_FORMAT
+        and state.get("fingerprint") == fp
+        and (os.path.isdir(tmp) or _state_complete(state, paths, planned))
+    ):
+        if state is not None and verbose:
+            print("[stream] existing job state does not match this job; "
+                  "starting fresh")
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        state = _fresh_state(fp)
+    resumed = len(state["completed"]) + len(state["dense"])
+    if not _state_complete(state, paths, planned):
+        os.makedirs(tmp, exist_ok=True)
+
+    kill_after = int(os.environ.get(KILL_AFTER_ENV, "0") or 0)
+    t_start = time.perf_counter()
+    done_this_run = 0
+    for i, (path, _) in enumerate(paths):
+        dst = f"params/{path}"
+        if path in planned:
+            if path in state["completed"]:
+                continue
+            entry, leaves = _compress_tensor_streaming(
+                source, planned[path], key, backend, budget, tmp, dst,
+                verbose,
+            )
+            state["completed"][path] = entry
+            state["leaves"].update(leaves)
+        else:
+            if path in state["dense"]:
+                continue
+            state["leaves"].update(source.copy_leaf(path, tmp, dst))
+            state["dense"][path] = 1
+        done_this_run += 1
+        if done_this_run % max(state_every, 1) == 0:
+            checkpointer.save_aux(out_dir, STATE_NAME, state)
+        if heartbeat is not None:
+            heartbeat.beat(i, {"path": path, "phase": "execute"})
+        if kill_after and done_this_run >= kill_after:
+            os.kill(os.getpid(), signal.SIGKILL)
+    checkpointer.save_aux(out_dir, STATE_NAME, state)
+
+    artifact = _finalize(plan, state, paths, out_dir, tmp, final, backend,
+                         budget, step)
+    try:
+        os.remove(os.path.join(out_dir, STATE_NAME))
+    except OSError:
+        pass
+    stats = {
+        "resumed_leaves": resumed,
+        "leaves_done_this_run": done_this_run,
+        "total_leaves": len(paths),
+        "wall_s": time.perf_counter() - t_start,
+        "budget_bytes": budget,
+        "peak_rss_bytes": peak_rss_bytes(),
+        "chunks": sum(
+            len(e["stream"]["chunk_sizes"])
+            for e in state["completed"].values()
+        ),
+    }
+    return artifact, stats
+
+
+def _finalize(plan, state, paths, out_dir, tmp, final, backend, budget, step):
+    """Assemble the checkpoint MANIFEST + compression manifest from job
+    state (in template/plan order, so the output is independent of how many
+    times the job restarted), commit the step dir atomically, persist the
+    artifact.  Idempotent: safe to re-run after a crash anywhere between
+    the first write and the state removal."""
+    leaves = {}
+    for path, _ in paths:
+        dst = f"params/{path}"
+        if path in state["completed"]:
+            leaves[f"{dst}/m_packed"] = state["leaves"][f"{dst}/m_packed"]
+            leaves[f"{dst}/C"] = state["leaves"][f"{dst}/C"]
+        else:
+            leaves[dst] = state["leaves"][dst]
+
+    tensors, pools = {}, []
+    for t in plan.tensors:
+        e = state["completed"][t.path]
+        tensors[t.path] = e
+        stream = e["stream"]
+        pools.append({
+            "tile_n": t.tile_n, "tile_d": t.tile_d, "K": t.K,
+            "method": t.method,
+            "num_tiles": t.num_tiles,
+            "num_tensors": 1,
+            "group_slices": t.groups,
+            "chunks": len(stream["chunk_sizes"]),
+            "chunk_sizes": stream["chunk_sizes"],
+            "solver_batch": (
+                max(stream["chunk_sizes"]) if t.method == "bbo" else None
+            ),
+            "bbo_iters": t.bbo_iters,
+            "solver_calls": (
+                t.bbo_iters * len(stream["chunk_sizes"])
+                if t.method == "bbo" else 0
+            ),
+            "chunk_policy": "stream",
+        })
+    ob = sum(e["orig_bytes"] for e in tensors.values())
+    nb = sum(e["new_bytes"] for e in tensors.values())
+    manifest = {
+        "format": MANIFEST_FORMAT,
+        "policy": plan.policy.to_dict(),
+        "solver_backend": backend,
+        "streaming": {"budget_bytes": int(budget)},
+        "tensors": tensors,
+        "skipped": {p: r for p, r in plan.skipped},
+        "pools": pools,
+        "totals": {
+            "orig_bytes": int(ob),
+            "new_bytes": int(nb),
+            "ratio": ob / max(nb, 1),
+        },
+    }
+    if plan.autotune is not None:
+        manifest["autotune"] = plan.autotune
+
+    if os.path.isdir(tmp):
+        ck_manifest = {"step": int(step), "leaves": leaves}
+        mpath = os.path.join(tmp, "MANIFEST.json")
+        with open(mpath + ".part", "w") as f:
+            json.dump(ck_manifest, f)
+        os.replace(mpath + ".part", mpath)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    artifact = CompressionArtifact(manifest)
+    artifact.save(out_dir)
+    return artifact
+
+
+def run_compression_job(
+    source,
+    plan: CompressionPlan,
+    out_dir: str,
+    *,
+    key=None,
+    backend: str | None = None,
+    budget_bytes: int | None = None,
+    max_restarts: int = 3,
+    state_every: int = 1,
+    heartbeat_path: str | None = None,
+    heartbeat_interval_s: float = 15.0,
+    verbose: bool = False,
+):
+    """Supervised streaming job: :func:`execute_streaming` under
+    ``run_with_restarts`` with a file-based :class:`Heartbeat` — an
+    in-process fault restarts the attempt, which resumes from the latest
+    job state instead of recompressing the model.  Returns
+    (artifact, stats) with ``stats["restarts"]`` recorded."""
+    hb_path = heartbeat_path or os.path.join(out_dir, "stream_heartbeat.json")
+    hb = Heartbeat(hb_path, interval_s=heartbeat_interval_s)
+    result = {}
+
+    def attempt_run(attempt: int) -> None:
+        if attempt and verbose:
+            print(f"[stream] restart attempt {attempt}: resuming from job "
+                  "state")
+        result["value"] = execute_streaming(
+            source, plan, out_dir, key=key, backend=backend,
+            budget_bytes=budget_bytes, state_every=state_every,
+            heartbeat=hb, verbose=verbose,
+        )
+
+    restarts = run_with_restarts(attempt_run, max_restarts=max_restarts)
+    if heartbeat_path is None:
+        # liveness metadata, not output: the default in-out_dir heartbeat
+        # must not survive a finished job (the output dir stays
+        # byte-identical to an unsupervised run)
+        try:
+            os.remove(hb_path)
+        except OSError:
+            pass
+    artifact, stats = result["value"]
+    stats["restarts"] = restarts
+    return artifact, stats

@@ -69,6 +69,8 @@ class StepTimer:
         self._t0 = time.perf_counter()
 
     def stop(self) -> float:
+        if self._t0 is None:
+            raise RuntimeError("StepTimer.stop() called before start()")
         dt = time.perf_counter() - self._t0
         self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
         return dt
@@ -90,7 +92,10 @@ def run_with_restarts(
         try:
             make_and_run(attempt)
             return attempt
-        except KeyboardInterrupt:
+        except (KeyboardInterrupt, SystemExit):
+            # deliberate shutdowns are not failures: restarting on
+            # SystemExit would turn `sys.exit(1)` (or a SIGTERM handler
+            # that raises it) into a restart loop that burns the budget
             raise
         except BaseException as e:  # noqa: BLE001 - supervision boundary
             if on_failure is not None:

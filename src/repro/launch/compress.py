@@ -21,6 +21,21 @@ are chosen by probing RD curves and allocating the byte budget
 
     PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
         --reduced --budget-mb 0.125 --engine qubo --calibrate
+
+``--streaming`` switches to the bounded-memory pipeline
+(:mod:`repro.compression.streaming`): the plan comes from checkpoint
+metadata (or an ``eval_shape`` template with ``--metadata-only`` — a
+llama3-405b *plan* fits on a laptop), the RD probe uses SVD-tail
+surrogates with exact fallback only at allocation boundaries, and the
+execute walks the checkpoint one leaf at a time under
+``REPRO_STREAM_BUDGET_BYTES`` (or ``--stream-budget-mb``), checkpointing
+job state so a killed run resumes instead of restarting:
+
+    PYTHONPATH=src python -m repro.launch.compress --arch llama3-405b \
+        --streaming --metadata-only --budget-mb 200000 --plan-only
+
+    PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
+        --reduced --streaming --ckpt-dir /ckpts/run1 --out-dir /ckpts/run1-c
 """
 
 from __future__ import annotations
@@ -57,6 +72,94 @@ def build_policy(args) -> CompressionPolicy:
         bbo_iters=args.bbo_iters,
         solver_backend=args.backend,
     )
+
+
+def run_streaming(args, cfg) -> None:
+    """The ``--streaming`` pipeline.  Prints machine-parseable
+    ``key=value`` lines (``peak_rss_bytes``, ``probe_s``,
+    ``stream_wall_s``) that the streaming bench rows and the CI smoke
+    consume."""
+    from repro.compression.streaming import (
+        CheckpointLeafSource,
+        TreeLeafSource,
+        peak_rss_bytes,
+        run_compression_job,
+        streaming_autotune_plan,
+    )
+
+    key = jax.random.PRNGKey(args.seed)
+    if args.ckpt_dir:
+        source = CheckpointLeafSource(args.ckpt_dir)
+    elif args.metadata_only:
+        # Shapes/dtypes of the full model without materialising one byte of
+        # weights: eval_shape traces init_model abstractly, so planning
+        # llama3-405b (~810 GB dense) costs ~200 MB of host RSS.
+        template = jax.eval_shape(
+            lambda k: split(init_model(k, cfg))[0],
+            jax.random.PRNGKey(args.seed),
+        )
+        source = TreeLeafSource(template)
+    else:
+        values, _ = split(init_model(key, cfg))
+        source = TreeLeafSource(values)
+    print(f"[stream] source {source.describe()}")
+
+    policy = build_policy(args)
+    budget_bytes = (
+        int(args.stream_budget_mb * 2**20)
+        if args.stream_budget_mb is not None else None
+    )
+    t0 = time.time()
+    if args.budget_mb is not None:
+        result = streaming_autotune_plan(
+            source, policy, int(args.budget_mb * 2**20), key=key,
+            engine=args.engine or "greedy",
+            sample_tiles=args.sample_tiles or 8,
+            backend=args.backend, verbose=True,
+        )
+        plan = result.plan
+        probe = plan.autotune["probe"]
+        print(
+            f"[autotune/stream] {probe['source']} surrogate probe of "
+            f"{len(result.probes)} tensors in {result.probe_s:.2f}s, "
+            f"exact fallback on {len(probe['exact_fallback'])} of "
+            f"{len(probe['boundary'])} boundary tensor(s), allocated "
+            f"{result.allocation.total_bytes / 2**20:.2f} of "
+            f"{args.budget_mb:.2f} MiB"
+        )
+        print(f"probe_s={result.probe_s:.3f}")
+    else:
+        plan = plan_compression(source.template(), policy)
+    print(plan.summary())
+    if args.plan_only:
+        print(f"[stream] planned in {time.time() - t0:.1f}s")
+        print(f"peak_rss_bytes={peak_rss_bytes()}")
+        return
+
+    artifact, stats = run_compression_job(
+        source, plan, args.out_dir, key=key, backend=args.backend,
+        budget_bytes=budget_bytes,
+        max_restarts=3 if args.max_restarts is None else args.max_restarts,
+        verbose=True,
+    )
+    print(
+        f"\n[stream] {stats['leaves_done_this_run']} leaves this run "
+        f"({stats['resumed_leaves']} resumed), {stats['chunks']} solve "
+        f"chunk(s), {stats['restarts']} restart(s), {stats['wall_s']:.1f}s"
+    )
+    print(
+        f"compressed tensors: "
+        f"{artifact.manifest['totals']['orig_bytes'] / 2**20:.2f} -> "
+        f"{artifact.total_bytes() / 2**20:.2f} MiB "
+        f"(x{artifact.compression_ratio:.2f})"
+    )
+    if args.budget_mb is not None:
+        over = artifact.total_bytes() > int(args.budget_mb * 2**20)
+        print(f"budget: {args.budget_mb:.2f} MiB -> "
+              f"{'OVER' if over else 'met'}")
+    print(f"saved compressed params to {args.out_dir}")
+    print(f"stream_wall_s={stats['wall_s']:.3f}")
+    print(f"peak_rss_bytes={stats['peak_rss_bytes']}")
 
 
 def main() -> None:
@@ -97,7 +200,47 @@ def main() -> None:
     ap.add_argument("--probe-tiles", type=int, default=None,
                     help="trial-compressed tiles per (tensor, candidate); "
                          "0 probes every tile (exact, slower; default 16)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="bounded-memory pipeline: plan from metadata, "
+                         "surrogate RD probe, leaf-at-a-time resumable "
+                         "execute (docs/compression_api.md)")
+    ap.add_argument("--metadata-only", action="store_true",
+                    help="with --streaming: plan/probe from an eval_shape "
+                         "template — no weights are ever materialised "
+                         "(requires --plan-only)")
+    ap.add_argument("--stream-budget-mb", type=float, default=None,
+                    help="host-memory budget for streaming solves "
+                         "(default REPRO_STREAM_BUDGET_BYTES or 1 GiB)")
+    ap.add_argument("--sample-tiles", type=int, default=None,
+                    help="surrogate probe sample tiles per (tensor, "
+                         "geometry) (default 8)")
+    ap.add_argument("--max-restarts", type=int, default=None,
+                    help="streaming job supervision restarts (default 3)")
     args = ap.parse_args()
+    if not args.streaming:
+        stray = [
+            name for name, val in (
+                ("--metadata-only", args.metadata_only or None),
+                ("--stream-budget-mb", args.stream_budget_mb),
+                ("--sample-tiles", args.sample_tiles),
+                ("--max-restarts", args.max_restarts),
+            ) if val is not None
+        ]
+        if stray:
+            ap.error(f"{', '.join(stray)} only apply with --streaming")
+    else:
+        if args.calibrate:
+            ap.error("--calibrate needs the full model in memory; it does "
+                     "not compose with --streaming")
+        if args.probe_tiles is not None:
+            ap.error("--probe-tiles is the in-memory probe knob; use "
+                     "--sample-tiles with --streaming")
+        if args.metadata_only and not args.plan_only:
+            ap.error("--metadata-only has no tensor data to execute on; "
+                     "add --plan-only (or drop --metadata-only)")
+        if args.metadata_only and args.ckpt_dir:
+            ap.error("--metadata-only and --ckpt-dir are mutually "
+                     "exclusive sources")
     if args.budget_mb is None:
         stray = [
             name for name, val in (
@@ -119,6 +262,9 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_for_smoke(cfg)
+    if args.streaming:
+        run_streaming(args, cfg)
+        return
     values, _ = split(init_model(jax.random.PRNGKey(args.seed), cfg))
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir)

@@ -39,6 +39,13 @@ class LoadResult:
 
 def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
     """(n,) arrival offsets in seconds from t0 (exponential inter-arrivals)."""
+    if n < 0:
+        raise ValueError(f"poisson_arrivals: n must be >= 0, got {n}")
+    if not qps > 0.0:
+        raise ValueError(
+            f"poisson_arrivals: qps must be > 0, got {qps!r} "
+            "(an open-loop Poisson process needs a positive rate)"
+        )
     rng = np.random.default_rng(seed)
     return np.cumsum(rng.exponential(1.0 / qps, size=n))
 

@@ -1,0 +1,61 @@
+"""Fault-tolerance and checkpoint-GC regression tests for the compression
+job path (kept out of test_substrates.py, which is gated on hypothesis)."""
+
+import os
+
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.fault_tolerance import StepTimer, run_with_restarts
+
+
+def test_gc_spares_other_writers_fresh_tmp(tmp_path):
+    """Two writers, one directory: a second writer's in-flight .tmp save
+    must survive the first writer's GC; only stale tmp dirs (crashed saves)
+    are collected."""
+    d = str(tmp_path)
+    tree = {"a": jnp.ones((2,))}
+    mgr = CheckpointManager(d, keep_last=1, async_save=False, stale_tmp_s=300.0)
+    # writer B mid-save: fresh tmp dir with a shard already written
+    fresh = os.path.join(d, "step_00000050.tmp")
+    os.makedirs(fresh)
+    with open(os.path.join(fresh, "a__shard0_0.npy"), "wb") as f:
+        f.write(b"partial")
+    # a crashed save from last week: same layout, stale mtime
+    stale = os.path.join(d, "step_00000010.tmp")
+    os.makedirs(stale)
+    old = 1_000_000.0
+    os.utime(stale, (old, old))
+    mgr.save(1, tree)                     # triggers GC
+    assert os.path.isdir(fresh), "GC deleted another writer's live save"
+    assert os.path.exists(os.path.join(fresh, "a__shard0_0.npy"))
+    assert not os.path.exists(stale), "stale crashed-save tmp not collected"
+    # writer B commits fine afterwards
+    os.rename(fresh, os.path.join(d, "step_00000050"))
+
+
+@pytest.mark.parametrize("exc", [SystemExit, KeyboardInterrupt])
+def test_run_with_restarts_reraises_deliberate_shutdown(exc):
+    """sys.exit / SIGINT must escape the supervision loop, not burn the
+    restart budget (a SystemExit(1) retried max_restarts times used to look
+    like a crash loop)."""
+    calls = []
+
+    def quitting(attempt):
+        calls.append(attempt)
+        raise exc()
+
+    with pytest.raises(exc):
+        run_with_restarts(quitting, max_restarts=3)
+    assert calls == [0], "shutdown exception was retried"
+
+
+def test_step_timer_stop_before_start_raises():
+    t = StepTimer()
+    with pytest.raises(RuntimeError, match="before start"):
+        t.stop()
+    # and the timer still works after the misuse
+    t.start()
+    assert t.stop() >= 0.0

@@ -29,6 +29,23 @@ from repro.serving import (
 EOS_NEVER = 500          # > reduced vocab (257): generation never stops early
 
 
+def test_poisson_arrivals_validates_rate():
+    """qps=0 used to ZeroDivisionError inside numpy (1/qps scale); the
+    loadgen now rejects non-positive rates with an actionable message."""
+    from repro.serving.loadgen import poisson_arrivals
+
+    a = poisson_arrivals(16, qps=4.0, seed=1)
+    assert a.shape == (16,) and np.all(np.diff(a) >= 0)
+    np.testing.assert_array_equal(poisson_arrivals(16, qps=4.0, seed=1), a)
+    assert poisson_arrivals(0, qps=4.0).shape == (0,)
+    with pytest.raises(ValueError, match="qps must be > 0"):
+        poisson_arrivals(16, qps=0.0)
+    with pytest.raises(ValueError, match="qps must be > 0"):
+        poisson_arrivals(16, qps=-1.0)
+    with pytest.raises(ValueError, match="n must be >= 0"):
+        poisson_arrivals(-1, qps=1.0)
+
+
 @pytest.fixture(scope="module")
 def qwen():
     cfg = reduced_for_smoke(get_config("qwen3-32b"))
