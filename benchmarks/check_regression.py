@@ -33,7 +33,12 @@ tolerance band:
             allocator regressions) and budget feasibility
             (achieved_bytes <= budget_bytes must stay 1.0 — an
             allocation over budget is a correctness regression, not a
-            slowdown).
+            slowdown),
+  delta     one delta_vs_cold row per (arch, method): warm-started delta
+            recompression speedup over a full cold recompress, plus the
+            ISSUE 9 contracts as 1.0-or-0.0 metrics — tile reuse fraction,
+            delta-distortion-no-worse-than-cold, and fused-vs-einsum
+            token identity when serving the delta artifact.
 
 Comparisons only run on *comparable* configs: a file whose ``device`` or
 ``pallas_mode`` differs from the baseline's (e.g. a TPU-produced baseline
@@ -141,6 +146,25 @@ SUITES = {
             "budget_feasible": lambda r: (
                 1.0 if r["achieved_bytes"] <= r["budget_bytes"] else 0.0
             ),
+        },
+    },
+    "BENCH_delta.json": {
+        "suite": "delta",
+        "comparable": ("device",),
+        "key": ("kind", "arch", "method"),
+        "metrics": ("speedup_vs_cold",),
+        "derived": {
+            # ISSUE 9 contracts as 1.0-or-0.0 metrics: any drop fails at
+            # any tolerance, so the gate enforces them, not just the
+            # bench's own asserts
+            "reuse_fraction": lambda r: 1.0 - r["fraction_resolved"],
+            "distortion_ok": lambda r: (
+                1.0
+                if r["delta_distortion"]
+                <= r["cold_distortion"] * (1 + 1e-6)
+                else 0.0
+            ),
+            "token_identity": lambda r: 1.0 if r["token_identical"] else 0.0,
         },
     },
 }

@@ -21,6 +21,12 @@ tensors (greedy water-filling or a QUBO solved on the in-repo Ising
 stack) — ``plan_compression(values, policy, budget_bytes=...)`` returns the
 refined plan.
 
+When weights *drift* (fine-tune steps, RLHF, LoRA merges), the **delta**
+tier (:mod:`repro.compression.delta`, docs/delta.md) recompresses against
+the previous artifact instead of cold-starting: per-tile drift measurement,
+re-solving only tiles past a threshold with warm-started solvers, and a
+``delta`` lineage block in the manifest that ``Engine`` surfaces.
+
 For checkpoints too large to hold in host memory, the **streaming** tier
 (:mod:`repro.compression.streaming`) runs the same plan/probe/execute
 pipeline leaf-at-a-time: metadata-only planning, SVD-tail surrogate
@@ -31,6 +37,15 @@ fault-tolerance substrate.
 from repro.compression.artifact import (
     MANIFEST_NAME,
     CompressionArtifact,
+)
+from repro.compression.delta import (
+    DEFAULT_DRIFT_THRESHOLD,
+    ColdStartRequired,
+    DeltaPlan,
+    TensorDrift,
+    compute_drift,
+    delta_recompress,
+    plan_delta,
 )
 from repro.compression.autotune import (
     Allocation,
@@ -71,6 +86,13 @@ __all__ = [
     "execute_plan",
     "CompressionArtifact",
     "MANIFEST_NAME",
+    "DEFAULT_DRIFT_THRESHOLD",
+    "ColdStartRequired",
+    "DeltaPlan",
+    "TensorDrift",
+    "compute_drift",
+    "delta_recompress",
+    "plan_delta",
     "Allocation",
     "AutotuneResult",
     "BudgetInfeasibleError",

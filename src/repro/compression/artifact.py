@@ -22,6 +22,8 @@ sniffing shapes:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import os
 
 import jax
@@ -71,6 +73,23 @@ class CompressionArtifact:
     def compression_ratio(self) -> float:
         return self.total_ratio
 
+    def fingerprint(self) -> str:
+        """Content hash of the manifest (canonical JSON, sha256/16 hex).
+
+        Delta recompression (:mod:`repro.compression.delta`) records this
+        as ``manifest["delta"]["parent_fingerprint"]`` so a chain of
+        artifacts carries verifiable lineage."""
+        blob = json.dumps(
+            self.manifest, sort_keys=True, separators=(",", ":")
+        ).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    @property
+    def delta(self) -> dict | None:
+        """The delta-lineage block (None for cold-compressed artifacts):
+        parent fingerprint, generation, tiles reused vs re-solved."""
+        return self.manifest.get("delta")
+
     def solver_batches(self) -> list:
         """Actual pooled ``solve_many`` batch sizes, one entry per BBO
         chunk (the final chunk of a pool may be smaller than the bound)."""
@@ -88,6 +107,13 @@ class CompressionArtifact:
             f"{t['orig_bytes'] / 2**20:.2f} -> {t['new_bytes'] / 2**20:.2f} MiB "
             f"(x{t['ratio']:.2f})"
         ]
+        d = self.delta
+        if d:
+            lines.append(
+                f"  delta gen {d['generation']} from {d['parent_fingerprint']}: "
+                f"{d['tiles_resolved']}/{d['tiles_total']} tiles re-solved "
+                f"({d['fraction_resolved']:.1%})"
+            )
         for path, e in self.manifest["tensors"].items():
             lines.append(
                 f"  {path:48s} {e['method']:11s} tile "
@@ -140,6 +166,8 @@ class CompressionArtifact:
                 "K": t.K,
                 "method": t.method,
                 "rule": t.rule,
+                "leaf_index": t.leaf_index,
+                "bbo_iters": t.bbo_iters,
                 "num_tiles": t.num_tiles,
                 "orig_bytes": t.orig_bytes,
                 "new_bytes": t.pred_bytes,

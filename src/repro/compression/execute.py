@@ -28,6 +28,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compression.artifact import CompressionArtifact, MANIFEST_FORMAT
@@ -41,6 +42,7 @@ __all__ = [
     "execute_plan",
     "surrogate_tile_bytes",
     "auto_pool_chunk",
+    "tile_residuals",
     "POOL_BUDGET_ENV",
 ]
 
@@ -92,6 +94,22 @@ def auto_pool_chunk(
         return total_tiles
     n_chunks = -(-total_tiles // cap)
     return -(-total_tiles // n_chunks)
+
+
+@jax.jit
+def tile_residuals(tiles, M, C):
+    """Per-tile ``||W_t - M_t C_t||_F`` in f32 over a (T, tn, td) stack.
+
+    This is THE residual metric shared by execute (which records it per
+    tile in the manifest as ``tile_resid``) and the delta-recompression
+    drift measurement (:mod:`repro.compression.delta`): both reconstruct
+    from the *stored* (dtype-cast) ``C``, so a delta run on an unchanged
+    checkpoint measures a drift ratio of exactly 1.0."""
+    V = jnp.einsum(
+        "tnk,tkd->tnd", M.astype(jnp.float32), C.astype(jnp.float32)
+    )
+    d = tiles.astype(jnp.float32) - V
+    return jnp.sqrt(jnp.sum(d * d, axis=(1, 2)))
 
 
 def _validate(plan: CompressionPlan, leaves: dict) -> None:
@@ -303,6 +321,12 @@ def execute_plan(
         w = _pack_tensor(t, M_seg, C_seg, leaf.dtype)
         nb = quantized.compressed_num_bytes(w)
         err = float(jnp.mean(err_seg))
+        # per-tile residual against the STORED representation (cast C) —
+        # the baseline the delta drift metric compares against
+        resid = tile_residuals(
+            _tensor_tiles(leaf, t), M_seg,
+            w["C"].reshape(-1, t.K, t.tile_d),
+        )
         compressed.append((path, t.orig_bytes, nb, err))
         manifest_tensors[path] = {
             "shape": list(t.shape),
@@ -314,10 +338,13 @@ def execute_plan(
             "K": t.K,
             "method": t.method,
             "rule": t.rule,
+            "leaf_index": t.leaf_index,
+            "bbo_iters": t.bbo_iters,
             "num_tiles": t.num_tiles,
             "orig_bytes": t.orig_bytes,
             "new_bytes": int(nb),
             "rel_err": err,
+            "tile_resid": [float(f"{v:.8g}") for v in np.asarray(resid)],
             "m_packed": {
                 "shape": list(w["m_packed"].shape),
                 "dtype": str(w["m_packed"].dtype),

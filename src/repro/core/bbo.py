@@ -239,7 +239,11 @@ def run_bbo_batch(key: jax.Array, cfg: BBOConfig, f: Callable, num_runs: int) ->
 
 
 def run_bbo_many(
-    key: jax.Array, cfg: BBOConfig, f_batch: Callable, num_problems: int
+    key: jax.Array,
+    cfg: BBOConfig,
+    f_batch: Callable,
+    num_problems: int,
+    warm_x: jax.Array | None = None,
 ) -> BBOResult:
     """Optimise ``num_problems`` independent instances in lock-step — the
     production tile fan-out (core/compress.py).
@@ -250,13 +254,22 @@ def run_bbo_many(
     P x num_reads annealing chains run as one flattened chain axis (one
     Pallas program on TPU) instead of P sequential per-spin loops.
 
+    ``warm_x`` (P, n), when given, warm-starts every problem from a prior
+    solution (delta recompression, docs/delta.md): the point is evaluated
+    and appended to the surrogate training data before the first iteration
+    (so the surrogate fits through it and best-so-far starts at its cost),
+    and each iteration's Ising solve seeds read 0 from the current
+    best-so-far spins via ``solve_many(init_state=...)``.  ``warm_x=None``
+    is the cold path, bit-identical to the pre-warm-start loop.
+
     Returns a ``BBOResult`` with a leading problem axis.  Traces eagerly;
     callers on a hot path should wrap it (with ``cfg``/``f_batch``/
     ``num_problems`` static) in ``jax.jit``.
     """
     cfg = cfg.resolved()
     P, n, dtype = num_problems, cfg.n, cfg.dtype
-    mp = cfg.max_points
+    # the warm observation occupies one extra dataset row per problem
+    mp = cfg.max_points + (1 if warm_x is not None else 0)
 
     k_init, k_fm, k_loop = jax.random.split(key, 3)
     X0 = jax.random.rademacher(k_init, (P, cfg.init_points, n), dtype=dtype)
@@ -292,6 +305,10 @@ def run_bbo_many(
         put_init, state, (jnp.swapaxes(X0, 0, 1), jnp.swapaxes(y0, 0, 1))
     )
 
+    if warm_x is not None:
+        xw = warm_x.astype(dtype)
+        state = append_plain(state, xw, f_batch(xw))
+
     def iteration(state: _State, key):
         k_fit, k_solve, k_dupe = jax.random.split(key, 3)
         if cfg.algo == "rs":
@@ -305,6 +322,7 @@ def run_bbo_many(
                 num_sweeps=cfg.num_sweeps,
                 num_reads=cfg.num_reads,
                 backend=cfg.backend,
+                init_state=state.best_x if warm_x is not None else None,
             )
             x = x.astype(dtype)
         x = dedupe_many(jax.random.split(k_dupe, P), state, x)

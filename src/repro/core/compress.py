@@ -108,6 +108,7 @@ def compress_tile_batch(
     method: str,
     bbo_iters: int = 64,
     backend: str = "auto",
+    M0: jax.Array | None = None,
 ):
     """tiles (T, tn, td), per-tile ``keys`` (T,) -> (M (T, tn, K),
     C (T, K, td), rel_err (T,)).
@@ -120,6 +121,17 @@ def compress_tile_batch(
     ``bbo_lib.run_bbo_many``: per iteration the T surrogates are fitted
     under vmap and the T Ising instances are solved by one batched
     ``ising.solve_many`` call (``backend`` selects jnp vs Pallas).
+
+    ``M0`` (T, tn, K), when given, warm-starts each tile from a previous
+    solution (delta recompression, docs/delta.md).  The cold init still
+    runs with the same per-tile keys — so a warm solve can never end worse
+    than the cold solve of the same tile — and a second candidate descends
+    from ``M0`` (greedy keeps ``M0`` as-is; alternating/bbo run the
+    block-coordinate descent from it); the per-tile better of the two by
+    ``dec.objective`` proceeds.  For BBO the winner additionally seeds the
+    surrogate dataset and the per-iteration Ising solves
+    (``run_bbo_many(warm_x=...)``).  ``M0=None`` is the cold path,
+    bit-identical to the pre-warm-start function.
     """
     tiles = tiles.astype(jnp.float32)
     T, tn, _ = tiles.shape
@@ -131,6 +143,18 @@ def compress_tile_batch(
         return M
 
     M = jax.vmap(init_one)(tiles, keys)
+
+    if M0 is not None:
+        M0 = jnp.where(M0.astype(jnp.float32) < 0.0, -1.0, 1.0)
+        if method in ("alternating", "bbo"):
+            M_warm = jax.vmap(
+                lambda W_t, m0: dec.alternating_decompose(W_t, K, M0=m0)[0]
+            )(tiles, M0)
+        else:
+            M_warm = M0
+        obj = jax.vmap(dec.objective)
+        better = obj(M_warm, tiles) < obj(M, tiles)
+        M = jnp.where(better[:, None, None], M_warm, M)
 
     if method == "bbo":
         cfg = bbo_lib.BBOConfig(
@@ -145,7 +169,10 @@ def compress_tile_batch(
                 tiles, xs
             )
 
-        res = bbo_lib.run_bbo_many(pool_key, cfg, f_batch, T)
+        res = bbo_lib.run_bbo_many(
+            pool_key, cfg, f_batch, T,
+            warm_x=M.reshape(T, tn * K) if M0 is not None else None,
+        )
         x_bbo = res.best_x.reshape(T, tn, K)
         better = res.best_y < jax.vmap(lambda M_t, W_t: dec.objective(M_t, W_t))(
             M, tiles

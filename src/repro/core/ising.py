@@ -20,6 +20,14 @@ The subsystem is batched and backend-dispatched (docs/solvers.md):
     (lock-step vectorised sweeps, VMEM-resident state); ``"auto"`` picks
     pallas on TPU and jnp elsewhere.  Both backends consume the same
     pre-drawn uniforms, so they realise the same Metropolis chain.
+
+    ``init_state=`` warm-starts the solve (docs/delta.md): a (P, n) spin
+    tensor overwrites read 0's random initial state *after* the PRNG draws
+    (SQA broadcasts it across the Trotter replicas of read 0), so the
+    remaining ``num_reads - 1`` restart chains — and, with
+    ``init_state=None``, every chain — are bit-identical to the cold
+    solver.  The uniforms are untouched: a warm solve consumes exactly the
+    randomness a cold solve would.
 ``solve_sa`` / ``solve_sq`` / ``solve_sqa`` / ``solve``
     Backward-compatible single-problem wrappers over the same core; the
     per-problem results of ``solve_many(key, ...)`` equal
@@ -138,9 +146,14 @@ def _solve_keys(
     n_trotter: int,
     gamma0: float,
     interpret: bool | None,
+    init_state=None,           # (P, n) warm-start spins or None (cold)
 ):
     """Shared batched core: draw x0 + uniforms per problem, anneal every
-    (problem, read) chain in one program, reduce best-of-reads."""
+    (problem, read) chain in one program, reduce best-of-reads.
+
+    ``init_state`` replaces read 0's random initial spins (SQA: all Trotter
+    replicas of read 0) after the draws, leaving the uniforms and the other
+    reads' initial states bit-identical to the cold path."""
     backend = resolve_backend(backend)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -148,6 +161,11 @@ def _solve_keys(
     S, R = num_sweeps, num_reads
     hf = h.astype(jnp.float32)
     Bf = B.astype(jnp.float32)
+    warm = None
+    if init_state is not None:
+        # project onto {-1, +1}: packed/unpacked M comes in as exact +-1,
+        # but tolerate any sign-carrying input (0 maps to +1)
+        warm = jnp.where(init_state.astype(jnp.float32) < 0.0, -1.0, 1.0)
 
     if name in ("sa", "sq"):
         def draw(k):
@@ -157,6 +175,8 @@ def _solve_keys(
             return x0, u
 
         x0, u = jax.vmap(draw)(keys)
+        if warm is not None:
+            x0 = x0.at[:, 0, :].set(warm)
         if name == "sa":
             temps = jax.vmap(
                 lambda hp, Bp: _temperature_schedule(hp, Bp, S)
@@ -190,6 +210,8 @@ def _solve_keys(
             return X0, u
 
         X0, u = jax.vmap(draw)(keys)
+        if warm is not None:
+            X0 = X0.at[:, 0, :, :].set(warm[:, None, :])
         if backend == "pallas":
             X, E = sqa_sweep_many(
                 hf, Bf, X0, u, jperps, temperature=t, interpret=interpret
@@ -231,13 +253,18 @@ def solve_many(
     n_trotter: int = 8,
     gamma0: float = 3.0,
     interpret: bool | None = None,
+    init_state: jax.Array | None = None,
 ):
     """Solve a batch of Ising problems in one program.
 
     Returns ``(x (P, n), e (P,))`` — the best-of-``num_reads`` spin vector
     and its energy per problem.  ``name`` is "sa" | "sq" | "qa"/"sqa";
     ``backend`` is "auto" | "pallas" | "jnp".  Problem ``i`` reproduces
-    ``solve(name, jax.random.split(key, P)[i], h[i], B[i])`` exactly."""
+    ``solve(name, jax.random.split(key, P)[i], h[i], B[i])`` exactly.
+
+    ``init_state`` (P, n), when given, warm-starts read 0 of every problem
+    from those spins (delta recompression, docs/delta.md); ``None`` is the
+    cold path, bit-identical to the pre-warm-start solvers."""
     canon = _CANON.get(name)
     if canon is None:
         raise ValueError(f"unknown solver {name!r} (sa|sq|qa|sqa)")
@@ -255,6 +282,7 @@ def solve_many(
         n_trotter=n_trotter,
         gamma0=gamma0,
         interpret=interpret,
+        init_state=init_state,
     )
 
 
@@ -272,12 +300,14 @@ def solve_sa(
     num_sweeps: int = 64,
     num_reads: int = 10,
     backend: str = "auto",
+    init_state: jax.Array | None = None,
 ):
     """Simulated annealing; returns the best of ``num_reads`` restarts."""
     x, e = _solve_keys(
         "sa", key[None], h[None], B[None],
         num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
         temperature=None, n_trotter=8, gamma0=3.0, interpret=None,
+        init_state=None if init_state is None else init_state[None],
     )
     return x[0], e[0]
 
@@ -293,12 +323,14 @@ def solve_sq(
     num_reads: int = 10,
     temperature: float = 0.1,
     backend: str = "auto",
+    init_state: jax.Array | None = None,
 ):
     """Simulated quenching: constant low temperature (paper: T = 0.1)."""
     x, e = _solve_keys(
         "sq", key[None], h[None], B[None],
         num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
         temperature=temperature, n_trotter=8, gamma0=3.0, interpret=None,
+        init_state=None if init_state is None else init_state[None],
     )
     return x[0], e[0]
 
@@ -317,6 +349,7 @@ def solve_sqa(
     temperature: float = 0.05,
     gamma0: float = 3.0,
     backend: str = "auto",
+    init_state: jax.Array | None = None,
 ):
     """Simulated QA: transverse field annealed geometrically Gamma0 -> ~0."""
     x, e = _solve_keys(
@@ -324,6 +357,7 @@ def solve_sqa(
         num_sweeps=num_sweeps, num_reads=num_reads, backend=backend,
         temperature=temperature, n_trotter=n_trotter, gamma0=gamma0,
         interpret=None,
+        init_state=None if init_state is None else init_state[None],
     )
     return x[0], e[0]
 

@@ -24,6 +24,11 @@ Randomness: pre-drawn uniforms are streamed in (P, chains, sweeps, n) —
 this keeps the kernel bit-exact against the pure-jnp oracles in ref.py
 (and avoids pltpu PRNG in interpret mode).  Spin update i uses
     dE = -2 x_i (h_i + 2 (B x)_i);  accept iff  dE < 0 or u < exp(-dE / T_s).
+
+The initial state ``x0`` is likewise caller-supplied, which makes it the
+warm-start surface: ``solve_many(init_state=...)`` (docs/delta.md) simply
+replaces chain 0's random x0 before invoking the kernel — the kernel
+itself has no cold/warm distinction and stays bit-exact vs the oracle.
 """
 
 from __future__ import annotations

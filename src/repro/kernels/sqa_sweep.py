@@ -16,6 +16,10 @@ kernel bit-exact against ``ref.sqa_sweep_many_ref``.
 
 The kernel returns every replica and its Ising energy; the caller
 (``repro.core.ising.solve_many``) reduces best-of over (reads x replicas).
+The initial replica stack ``X0`` is caller-supplied — the warm-start
+surface: ``solve_many(init_state=...)`` (docs/delta.md) broadcasts the
+warm spins across read 0's Trotter replicas before invoking the kernel,
+which itself has no cold/warm distinction.
 """
 
 from __future__ import annotations

@@ -36,6 +36,16 @@ job state so a killed run resumes instead of restarting:
 
     PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
         --reduced --streaming --ckpt-dir /ckpts/run1 --out-dir /ckpts/run1-c
+
+``--delta-from <dir>`` recompresses drifted weights as a *delta* against a
+previously compressed checkpoint (docs/delta.md): geometry and method come
+from the parent manifest (the policy flags are unused), only tiles whose
+drift crossed ``--delta-threshold`` are re-solved — warm-started from the
+parent's (M, C) — and the manifest records the delta lineage:
+
+    PYTHONPATH=src python -m repro.launch.compress --arch qwen3-32b \
+        --reduced --ckpt-dir /ckpts/run1-more-steps \
+        --delta-from /ckpts/run1-c --out-dir /ckpts/run1-c2
 """
 
 from __future__ import annotations
@@ -162,6 +172,63 @@ def run_streaming(args, cfg) -> None:
     print(f"peak_rss_bytes={stats['peak_rss_bytes']}")
 
 
+def run_delta(args, values) -> None:
+    """The ``--delta-from`` pipeline: anchor on a previously compressed
+    checkpoint and re-solve only drifted tiles (docs/delta.md).  Prints
+    machine-parseable ``key=value`` lines (``delta_wall_s``,
+    ``fraction_resolved``) the delta bench/smoke consume."""
+    from repro.compression import (
+        ColdStartRequired,
+        CompressionArtifact,
+        delta_recompress,
+        plan_delta,
+    )
+
+    parent = CompressionArtifact.load(args.delta_from)
+    template = parent.restore_template(values)
+    step, state = CheckpointManager(args.delta_from).restore_latest(
+        {"params": template}
+    )
+    if state is None:
+        raise SystemExit(
+            f"--delta-from {args.delta_from}: manifest found but no "
+            "restorable compressed checkpoint"
+        )
+    prev = state["params"]
+    print(f"[delta] parent {parent.fingerprint()} (step {step}, "
+          f"{len(parent.manifest['tensors'])} tensors)")
+
+    threshold = args.delta_threshold
+    kw = {} if threshold is None else {"threshold": threshold}
+    try:
+        if args.plan_only:
+            print(plan_delta(parent, prev, values, **kw).summary())
+            return
+        t = time.time()
+        cvalues, artifact = delta_recompress(
+            parent, prev, values, key=jax.random.PRNGKey(args.seed),
+            backend=args.backend, verbose=True, **kw,
+        )
+        dt = time.time() - t
+    except ColdStartRequired as e:
+        raise SystemExit(
+            f"--delta-from cannot anchor on {args.delta_from}: {e}\n"
+            "run a full compression (drop --delta-from) instead"
+        )
+    d = artifact.delta
+    print(
+        f"\n[delta] gen {d['generation']}: {d['tiles_resolved']}/"
+        f"{d['tiles_total']} tiles re-solved ({d['fraction_resolved']:.1%}) "
+        f"across {d['tensors_touched']} tensor(s) in {dt:.1f}s"
+    )
+    path = checkpointer.save(args.out_dir, 0, {"params": cvalues})
+    mpath = artifact.save(args.out_dir)
+    print(f"saved compressed params to {path}")
+    print(f"saved compression manifest to {mpath}")
+    print(f"delta_wall_s={dt:.3f}")
+    print(f"fraction_resolved={d['fraction_resolved']:.4f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -216,7 +283,30 @@ def main() -> None:
                          "geometry) (default 8)")
     ap.add_argument("--max-restarts", type=int, default=None,
                     help="streaming job supervision restarts (default 3)")
+    ap.add_argument("--delta-from", default=None,
+                    help="previously compressed checkpoint dir (manifest + "
+                         "compressed params): recompress the current "
+                         "weights as a warm-started delta against it "
+                         "(docs/delta.md)")
+    ap.add_argument("--delta-threshold", type=float, default=None,
+                    help="drift ratio above which a tile re-solves "
+                         "(default 1.25; an unchanged tile sits at 1.0)")
     args = ap.parse_args()
+    if args.delta_from:
+        stray = [
+            name for name, val in (
+                ("--streaming", args.streaming or None),
+                ("--budget-mb", args.budget_mb),
+                ("--policy", args.policy),
+                ("--autotune-kernels", args.autotune_kernels or None),
+            ) if val is not None
+        ]
+        if stray:
+            ap.error(f"{', '.join(stray)} do not apply with --delta-from "
+                     "(geometry, method and kernel schedules come from the "
+                     "parent manifest)")
+    elif args.delta_threshold is not None:
+        ap.error("--delta-threshold only applies with --delta-from")
     if not args.streaming:
         stray = [
             name for name, val in (
@@ -274,6 +364,10 @@ def main() -> None:
         if state is not None:
             values = state["params"]
             print(f"[restore] step {step}")
+
+    if args.delta_from:
+        run_delta(args, values)
+        return
 
     policy = build_policy(args)
     if args.budget_mb is not None:

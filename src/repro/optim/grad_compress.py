@@ -1,15 +1,23 @@
-"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+"""Gradient/weight compression hooks for the training loop.
 
-At multi-pod scale the gradient all-reduce over the ``pod`` axis crosses the
+**Int8 error-feedback gradient compression** for cross-pod all-reduce: at
+multi-pod scale the gradient all-reduce over the ``pod`` axis crosses the
 slow data-centre interconnect; compressing it 4x (fp32 accum -> int8 + per-
 tensor scale) cuts that traffic proportionally.  Error feedback (Seide et
 al.; Karimireddy et al. 2019) keeps the quantisation residual in the
 optimiser state and re-injects it next step, preserving convergence.
-
 Usage (training/loop.py, optional): gradients are quantised *before* the
 pod-axis psum inside a shard_map over 'pod', and dequantised after; the
 residual tree lives in TrainState.  The quantise/dequantise pair here is
 solver-agnostic and unit-tested for the error-feedback contract.
+
+**Periodic weight recompression** (:class:`CompressionCycle`): the
+host-side hook that turns train -> compress -> serve from a one-shot into
+a cycle (docs/delta.md).  Call ``maybe_recompress(step, values)`` from the
+training loop; every ``every`` steps it compresses the current weights —
+cold the first time, then as warm-started *deltas* against the previous
+artifact (:func:`repro.compression.delta.delta_recompress`), re-solving
+only tiles whose drift crossed the threshold.
 """
 
 from __future__ import annotations
@@ -17,7 +25,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_int8", "dequantize_int8", "ef_compress", "ef_residual_zeros"]
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "ef_compress",
+    "ef_residual_zeros",
+    "CompressionCycle",
+]
 
 
 def quantize_int8(x: jax.Array):
@@ -54,3 +68,85 @@ def ef_compress(grads, residual):
     qtree = treedef.unflatten([o[0] for o in outs])
     new_res = treedef.unflatten([o[1] for o in outs])
     return qtree, new_res
+
+
+class CompressionCycle:
+    """Periodic (delta-)recompression of the training weights.
+
+    Host-side and stateful — call it between jitted train steps, not inside
+    them.  The first firing runs a full cold ``plan_compression`` +
+    ``execute_plan``; later firings run
+    :func:`repro.compression.delta.delta_recompress` against the previous
+    artifact with the previous *compressed* tree as the warm anchor,
+    falling back to cold automatically when the anchor is invalid
+    (``ColdStartRequired`` — e.g. the eligible-tensor geometry changed).
+
+    ``maybe_recompress(step, values)`` returns ``None`` off-schedule and
+    ``(compressed_values, artifact)`` when it fires; the latest pair also
+    stays available as ``.compressed`` / ``.artifact`` for checkpointing
+    and serving (``artifact.delta`` carries the lineage block).
+    """
+
+    def __init__(
+        self,
+        policy,
+        every: int,
+        *,
+        key=None,
+        threshold: float | None = None,
+        backend: str | None = None,
+        verbose: bool = False,
+    ):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.policy = policy
+        self.every = every
+        self.key = jax.random.PRNGKey(0) if key is None else key
+        self.threshold = threshold
+        self.backend = backend
+        self.verbose = verbose
+        self.artifact = None
+        self.compressed = None
+        self.last_step = None
+
+    def _cold(self, values):
+        from repro import compression as comp
+
+        plan = comp.plan_compression(values, self.policy)
+        return comp.execute_plan(
+            plan, values, key=self.key, backend=self.backend,
+            verbose=self.verbose,
+        )
+
+    def recompress(self, values):
+        """Compress now (cold first time, delta after)."""
+        from repro import compression as comp
+        from repro.compression import delta as delta_mod
+
+        if self.artifact is None or self.compressed is None:
+            pair = self._cold(values)
+        else:
+            kw = {}
+            if self.threshold is not None:
+                kw["threshold"] = self.threshold
+            try:
+                pair = comp.delta_recompress(
+                    self.artifact, self.compressed, values,
+                    key=self.key, backend=self.backend,
+                    verbose=self.verbose, **kw,
+                )
+            except delta_mod.ColdStartRequired as e:
+                if self.verbose:
+                    print(f"[compress-cycle] cold start forced: {e}")
+                pair = self._cold(values)
+        self.compressed, self.artifact = pair
+        return pair
+
+    def maybe_recompress(self, step: int, values):
+        """Fire every ``self.every`` steps (step numbering starts at 1)."""
+        if step < 1 or step % self.every:
+            return None
+        if self.last_step == step:
+            return self.compressed, self.artifact
+        self.last_step = step
+        return self.recompress(values)

@@ -201,6 +201,18 @@ class Engine:
                 "ratio": round(art.total_ratio, 3),
                 "methods": methods,
             }
+            delta = art.manifest.get("delta")
+            if delta:
+                # delta-recompressed artifact (docs/delta.md): surface the
+                # lineage — what fraction of this model was re-solved
+                # against which parent — alongside what is being served
+                self.compression["delta"] = {
+                    "parent_fingerprint": delta.get("parent_fingerprint"),
+                    "generation": delta.get("generation"),
+                    "tiles_resolved": delta.get("tiles_resolved"),
+                    "tiles_reused": delta.get("tiles_reused"),
+                    "fraction_resolved": delta.get("fraction_resolved"),
+                }
             autotune = art.manifest.get("autotune")
             if autotune:
                 # budget-allocated artifact (docs/autotune.md): surface what

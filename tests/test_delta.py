@@ -1,0 +1,336 @@
+"""Delta recompression (docs/delta.md): warm-start plumbing and the
+reuse/lineage contract.
+
+The load-bearing invariants:
+
+  * ``solve_many(init_state=None)`` is bit-identical to the pre-warm-start
+    solvers — proven against an in-test re-implementation of the original
+    draw logic over the ``kernels/ref.py`` oracles, for SA/SQ/SQA on both
+    backends;
+  * ``init_state`` actually seeds read 0 (and both backends agree on the
+    warm chain);
+  * a warm ``compress_tile_batch`` never ends worse than the cold solve of
+    the same tiles;
+  * a delta against an *unchanged* checkpoint reuses 100% of tiles and
+    reproduces the parent byte-for-byte (arrays and manifest entries);
+  * a drifted checkpoint re-solves only the drifted tiles and ends no
+    worse than a full cold recompression;
+  * anchoring failures raise ``ColdStartRequired`` and the training-loop
+    ``CompressionCycle`` falls back / schedules correctly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compression as comp
+from repro.compression import delta as delta_mod
+from repro.compression.artifact import CompressionArtifact
+from repro.compression.plan import tree_paths
+from repro.core import ising
+from repro.core.compress import compress_tile_batch
+from repro.kernels import ref as _ref
+from repro.optim.grad_compress import CompressionCycle
+
+
+SOLVER_KW = {"sa": {}, "sq": {}, "qa": {"num_sweeps": 12}}
+
+
+def _cold_reference(name, key, probs, num_sweeps, num_reads, n_trotter=8,
+                    gamma0=3.0):
+    """The pre-warm-start solver, re-implemented from the paper spec: draw
+    x0 + uniforms per problem, run the jnp oracle, reduce best-of-reads.
+    Kept independent of ``ising._solve_keys`` so a regression there cannot
+    hide here."""
+    h, B = probs
+    P, n = h.shape
+    S, R = num_sweeps, num_reads
+    hf, Bf = h.astype(jnp.float32), B.astype(jnp.float32)
+    keys = jax.random.split(key, P)
+
+    if name in ("sa", "sq"):
+        def draw(k):
+            ka, kb = jax.random.split(k)
+            return (jax.random.rademacher(ka, (R, n), dtype=jnp.float32),
+                    jax.random.uniform(kb, (R, S, n), dtype=jnp.float32))
+
+        x0, u = jax.vmap(draw)(keys)
+        if name == "sa":
+            temps = jax.vmap(
+                lambda hp, Bp: ising._temperature_schedule(hp, Bp, S)
+            )(hf, Bf).astype(jnp.float32)
+            xs, es = _ref.sa_sweep_many_ref(hf, Bf, x0, u, temps)
+        else:
+            xs, es = _ref.sq_sweep_many_ref(hf, Bf, x0, u, temperature=0.1)
+    else:
+        t, T = 0.05, n_trotter
+        r = jnp.linspace(0.0, 1.0, S)
+        gammas = gamma0 * (1e-2 / gamma0) ** r
+        PT = T * t
+        jperps = -0.5 * PT * jnp.log(jnp.tanh(jnp.maximum(gammas / PT, 1e-7)))
+
+        def draw(k):
+            ka, kb = jax.random.split(k)
+            return (jax.random.rademacher(ka, (R, T, n), dtype=jnp.float32),
+                    jax.random.uniform(kb, (R, S, T, n), dtype=jnp.float32))
+
+        X0, u = jax.vmap(draw)(keys)
+        X, E = _ref.sqa_sweep_many_ref(hf, Bf, X0, u, jperps, temperature=t)
+        xs, es = X.reshape(P, R * T, n), E.reshape(P, R * T)
+
+    best = jnp.argmin(es, axis=1)
+    x = jnp.take_along_axis(xs, best[:, None, None], axis=1)[:, 0]
+    e = jnp.take_along_axis(es, best[:, None], axis=1)[:, 0]
+    return x, e
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("solver", ["sa", "sq", "qa"])
+def test_cold_path_bit_identical_to_pre_warmstart_solver(solver, backend):
+    """init_state=None must be THE pre-change solver, bit for bit."""
+    P, n = 4, 10
+    probs = ising.random_problems(jax.random.PRNGKey(0), P, n)
+    key = jax.random.PRNGKey(5)
+    kw = SOLVER_KW[solver]
+    sweeps = kw.get("num_sweeps", 16)
+    x, e = ising.solve_many(solver, key, probs, num_sweeps=sweeps,
+                            num_reads=3, backend=backend, interpret=True,
+                            init_state=None)
+    canon = "sqa" if solver == "qa" else solver
+    xr, er = _cold_reference(canon, key, probs, sweeps, 3)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(xr))
+    np.testing.assert_allclose(np.asarray(e), np.asarray(er),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("solver", ["sa", "sq", "qa"])
+def test_init_state_seeds_read_zero(solver):
+    """num_reads=1, num_sweeps=0: the output IS the warm state (no sweep
+    ever flips a spin), so init_state demonstrably replaces the random
+    init."""
+    P, n = 3, 8
+    probs = ising.random_problems(jax.random.PRNGKey(1), P, n)
+    warm = jnp.sign(
+        jax.random.normal(jax.random.PRNGKey(2), (P, n))
+    ).astype(jnp.float32)
+    x, _ = ising.solve_many(solver, jax.random.PRNGKey(3), probs,
+                            num_sweeps=0, num_reads=1, backend="jnp",
+                            init_state=warm)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(warm))
+    # and with >1 reads the other chains still run cold: same key without
+    # init_state must produce an energy no worse than the warm seed alone
+    xc, _ = ising.solve_many(solver, jax.random.PRNGKey(3), probs,
+                             num_sweeps=0, num_reads=4, backend="jnp")
+    assert np.asarray(xc).shape == (P, n)
+
+
+@pytest.mark.parametrize("solver", ["sa", "sq", "qa"])
+def test_pallas_matches_jnp_with_init_state(solver):
+    """The warm chain is backend-independent, like the cold one."""
+    P, n = 4, 12
+    probs = ising.random_problems(jax.random.PRNGKey(4), P, n)
+    warm = jnp.sign(
+        jax.random.normal(jax.random.PRNGKey(5), (P, n))
+    ).astype(jnp.float32)
+    kw = SOLVER_KW[solver]
+    xj, ej = ising.solve_many(solver, jax.random.PRNGKey(6), probs,
+                              num_reads=3, backend="jnp",
+                              init_state=warm, **kw)
+    xp, ep = ising.solve_many(solver, jax.random.PRNGKey(6), probs,
+                              num_reads=3, backend="pallas", interpret=True,
+                              init_state=warm, **kw)
+    np.testing.assert_array_equal(np.asarray(xj), np.asarray(xp))
+    np.testing.assert_allclose(np.asarray(ej), np.asarray(ep),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["greedy", "alternating"])
+def test_warm_tile_batch_not_worse_than_cold(method):
+    """compress_tile_batch(M0=...) races the cold init against the warm
+    descent per tile — for the deterministic methods the warm result can
+    never be worse (BBO's stochastic refinement explores differently warm
+    vs cold; its contract is the aggregate one measured by
+    benchmarks/delta_bench.py)."""
+    T, tn, td, K = 6, 8, 16, 4
+    tiles = jax.random.normal(jax.random.PRNGKey(7), (T, tn, td))
+    keys = jax.random.split(jax.random.PRNGKey(8), T)
+    pk = jax.random.PRNGKey(9)
+    kw = dict(bbo_iters=4, backend="jnp")
+    Mc, _, err_c = compress_tile_batch(tiles, keys, pk, K, method, **kw)
+    M0 = jnp.sign(jax.random.normal(jax.random.PRNGKey(10), (T, tn, K)))
+    Mw, _, err_w = compress_tile_batch(tiles, keys, pk, K, method, M0=M0,
+                                       **kw)
+    assert np.all(np.asarray(err_w) <= np.asarray(err_c) + 1e-6)
+    # and M0=None twice is deterministic (the cold path has no hidden state)
+    Mc2, _, err_c2 = compress_tile_batch(tiles, keys, pk, K, method, **kw)
+    np.testing.assert_array_equal(np.asarray(Mc), np.asarray(Mc2))
+    np.testing.assert_array_equal(np.asarray(err_c), np.asarray(err_c2))
+
+
+def test_warm_tile_batch_bbo_seeds_dataset_and_stays_deterministic():
+    """The BBO warm path runs end to end and is deterministic per seed —
+    the warm point enters the surrogate dataset, so the warm result can
+    never be worse than the raced *init*, even when the refinement's
+    exploration diverges from the cold run's."""
+    T, tn, td, K = 4, 8, 16, 4
+    tiles = jax.random.normal(jax.random.PRNGKey(7), (T, tn, td))
+    keys = jax.random.split(jax.random.PRNGKey(8), T)
+    pk = jax.random.PRNGKey(9)
+    M0 = jnp.sign(jax.random.normal(jax.random.PRNGKey(10), (T, tn, K)))
+    kw = dict(bbo_iters=4, backend="jnp")
+    Mw, _, err_w = compress_tile_batch(tiles, keys, pk, K, "bbo", M0=M0, **kw)
+    Mw2, _, err_w2 = compress_tile_batch(tiles, keys, pk, K, "bbo", M0=M0,
+                                         **kw)
+    np.testing.assert_array_equal(np.asarray(Mw), np.asarray(Mw2))
+    np.testing.assert_array_equal(np.asarray(err_w), np.asarray(err_w2))
+    # warm never worse than the non-bbo warm race of the same tiles
+    _, _, err_alt = compress_tile_batch(tiles, keys, pk, K, "alternating",
+                                        M0=M0, **kw)
+    assert np.all(np.asarray(err_w) <= np.asarray(err_alt) + 1e-6)
+
+
+def _small_tree(key=0, rows=32, cols=64):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return {
+        "blk": {"w": jax.random.normal(k1, (rows, cols))},
+        "mlp": {"w": jax.random.normal(k2, (rows, 2 * cols))},
+    }
+
+
+def _small_policy(method="alternating"):
+    return comp.CompressionPolicy(method=method, tile_n=8, tile_d=32,
+                                  rank_ratio=0.5, min_size=1)
+
+
+def _compress(values, policy):
+    plan = comp.plan_compression(values, policy)
+    return comp.execute_plan(plan, values, key=jax.random.PRNGKey(0))
+
+
+def test_delta_unchanged_checkpoint_reproduces_parent():
+    """Zero drift -> 100% reuse, parent arrays and manifest entries kept
+    byte-for-byte, lineage block records the parent fingerprint."""
+    values = _small_tree()
+    cvals, art = _compress(values, _small_policy())
+    cv2, art2 = comp.delta_recompress(art, cvals, values,
+                                      key=jax.random.PRNGKey(0))
+    d = art2.delta
+    assert d["tiles_resolved"] == 0
+    assert d["fraction_resolved"] == 0.0
+    assert d["tensors_touched"] == 0
+    assert d["parent_fingerprint"] == art.fingerprint()
+    assert d["generation"] == 1
+    assert art2.manifest["tensors"] == art.manifest["tensors"]
+    prev = dict(tree_paths(cvals))
+    new = dict(tree_paths(cv2))
+    assert prev.keys() == new.keys()
+    for p in prev:
+        np.testing.assert_array_equal(np.asarray(prev[p]), np.asarray(new[p]))
+
+
+def test_delta_drifted_subset_resolves_and_not_worse_than_cold():
+    """Drift one row band of one tensor: only its tiles re-solve, reused
+    tiles keep the parent bytes, and total distortion ends <= a full cold
+    recompression of the drifted weights."""
+    values = _small_tree()
+    policy = _small_policy()
+    cvals, art = _compress(values, policy)
+
+    drifted = jax.tree.map(lambda x: x, values)
+    W = drifted["mlp"]["w"]
+    noise = jax.random.normal(jax.random.PRNGKey(3), (8, W.shape[1]))
+    drifted["mlp"]["w"] = W.at[:8, :].add(noise * float(jnp.std(W)))
+
+    cv2, art2 = comp.delta_recompress(art, cvals, drifted,
+                                      key=jax.random.PRNGKey(0))
+    d = art2.delta
+    assert 0 < d["tiles_resolved"] < d["tiles_total"]
+    assert d["tensors_touched"] == 1
+    # the untouched tensor keeps the parent entry and bytes verbatim
+    assert (art2.manifest["tensors"]["blk/w"]
+            == art.manifest["tensors"]["blk/w"])
+    np.testing.assert_array_equal(
+        np.asarray(cvals["blk"]["w"]["m_packed"]),
+        np.asarray(cv2["blk"]["w"]["m_packed"]))
+
+    _, art_cold = _compress(drifted, policy)
+
+    def dist(m):
+        return sum(float(np.sum(np.asarray(e["tile_resid"]) ** 2))
+                   for e in m["tensors"].values())
+
+    assert dist(art2.manifest) <= dist(art_cold.manifest) * (1 + 1e-6)
+
+
+def test_plan_delta_thresholds():
+    """Ratio is exactly 1.0 on unchanged tiles; threshold slices masks."""
+    values = _small_tree()
+    cvals, art = _compress(values, _small_policy())
+    dplan = delta_mod.plan_delta(art, cvals, values)
+    for drift in dplan.drifts:
+        assert drift.recorded
+        np.testing.assert_allclose(drift.ratio, 1.0, rtol=1e-4)
+    assert dplan.tiles_resolved == 0
+    # threshold below 1.0 forces everything to re-solve
+    dplan_all = delta_mod.plan_delta(art, cvals, values, threshold=0.5)
+    assert dplan_all.tiles_resolved == dplan_all.tiles_total
+
+
+def test_cold_start_required_cases():
+    values = _small_tree()
+    policy = _small_policy()
+    cvals, art = _compress(values, policy)
+
+    # predicted-only manifest (from_plan) has no stored bytes to reuse
+    plan = comp.plan_compression(values, policy)
+    pred = CompressionArtifact.from_plan(plan)
+    with pytest.raises(delta_mod.ColdStartRequired):
+        comp.delta_recompress(pred, cvals, values)
+
+    # shape change invalidates the tile geometry
+    reshaped = jax.tree.map(lambda x: x, values)
+    reshaped["mlp"]["w"] = jnp.zeros((16, 64))
+    with pytest.raises(delta_mod.ColdStartRequired):
+        comp.delta_recompress(art, cvals, reshaped)
+
+    # prev_params that fail validate_params cannot anchor
+    broken = jax.tree.map(lambda x: x, cvals)
+    broken["mlp"]["w"] = values["mlp"]["w"]          # dense where compressed
+    with pytest.raises(delta_mod.ColdStartRequired):
+        comp.delta_recompress(art, broken, values)
+
+
+def test_compression_cycle_schedules_and_goes_delta():
+    values = _small_tree()
+    cycle = CompressionCycle(_small_policy(), every=2)
+    assert cycle.maybe_recompress(1, values) is None      # off-schedule
+    out = cycle.maybe_recompress(2, values)
+    assert out is not None
+    _, art1 = out
+    assert art1.delta is None                             # first firing: cold
+    # same step does not refire (returns the cached pair)
+    again = cycle.maybe_recompress(2, values)
+    assert again[1] is art1
+
+    drifted = jax.tree.map(lambda x: x, values)
+    drifted["blk"]["w"] = values["blk"]["w"] + 0.05
+    _, art2 = cycle.maybe_recompress(4, drifted)
+    assert art2.delta is not None                         # second: delta
+    assert art2.delta["parent_fingerprint"] == art1.fingerprint()
+    assert art2.delta["generation"] == 1
+
+    with pytest.raises(ValueError):
+        CompressionCycle(_small_policy(), every=0)
+
+
+def test_compression_cycle_cold_fallback_on_anchor_loss():
+    values = _small_tree()
+    cycle = CompressionCycle(_small_policy(), every=1)
+    cycle.maybe_recompress(1, values)
+    # geometry change: the old artifact cannot anchor the new tree
+    reshaped = {"blk": {"w": jax.random.normal(jax.random.PRNGKey(9),
+                                               (16, 96))}}
+    _, art = cycle.maybe_recompress(2, reshaped)
+    assert art.delta is None                              # fell back to cold
+    assert "blk/w" in art.manifest["tensors"]

@@ -1,0 +1,90 @@
+"""Docs CI link-checker: dead pointers in README.md / docs/*.md fail CI.
+
+Two classes of pointer are validated:
+
+  1. markdown links ``[text](target)`` whose target is a relative path
+     (http/https/mailto and pure ``#anchor`` links are skipped; a
+     ``path#anchor`` link checks the path part),
+  2. path tokens in prose or backticks — any token containing a ``/`` and
+     ending in ``.py`` or ``.md`` (so ``compression/delta.py`` is checked
+     but a bare ``ref.py`` or a dotted module path is not).
+
+Each pointer resolves against, in order: the markdown file's own
+directory, the repo root, ``src/``, and ``src/repro/`` — the bases the
+docs actually abbreviate against (``kernels/sa_sweep.py`` means
+``src/repro/kernels/sa_sweep.py``).  A pointer that resolves under none
+of them is reported with its file:line and the process exits 1.
+
+    python tools/check_doc_links.py          # from the repo root
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# markdown [text](target); target captured lazily up to the first ')'
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path-ish token: has a '/', ends .py or .md; '::' suffixes (pytest-style
+# benchmarks/kernel_bench.py::bench_ising_suite) end the token at .py
+PATH_TOKEN = re.compile(r"[\w.-]+(?:/[\w.-]+)+\.(?:py|md)\b")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def resolve(target: str, md_dir: str) -> bool:
+    for base in (md_dir, REPO, os.path.join(REPO, "src"),
+                 os.path.join(REPO, "src", "repro")):
+        if os.path.exists(os.path.join(base, target)):
+            return True
+    return False
+
+
+def check_file(path: str) -> list:
+    md_dir = os.path.dirname(os.path.abspath(path))
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            targets = []
+            for m in MD_LINK.finditer(line):
+                t = m.group(1)
+                if t.startswith(SKIP_SCHEMES) or t.startswith("#"):
+                    continue
+                targets.append(t.split("#", 1)[0])
+            targets.extend(m.group(0) for m in PATH_TOKEN.finditer(line))
+            for t in targets:
+                if t.startswith("/"):      # absolute: outside-repo example
+                    continue
+                if not resolve(t, md_dir):
+                    rel = os.path.relpath(path, REPO)
+                    bad.append(f"{rel}:{lineno}: dead pointer {t!r}")
+    return bad
+
+
+def main() -> None:
+    files = [os.path.join(REPO, "README.md")] + sorted(
+        glob.glob(os.path.join(REPO, "docs", "*.md"))
+    )
+    missing = [f for f in files if not os.path.exists(f)]
+    if missing:
+        for f in missing:
+            print(f"missing doc file: {os.path.relpath(f, REPO)}",
+                  file=sys.stderr)
+        raise SystemExit(1)
+    bad = []
+    for f in files:
+        bad.extend(check_file(f))
+    if bad:
+        print("\n".join(bad), file=sys.stderr)
+        print(f"\n{len(bad)} dead pointer(s) across {len(files)} files",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print(f"checked {len(files)} files: all pointers resolve")
+
+
+if __name__ == "__main__":
+    main()
