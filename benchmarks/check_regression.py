@@ -34,6 +34,11 @@ tolerance band:
             (achieved_bytes <= budget_bytes must stay 1.0 — an
             allocation over budget is a correctness regression, not a
             slowdown),
+  eval      one eval_vs_frobenius row per arch: the ISSUE 10 contracts as
+            1.0-or-0.0 metrics — eval-loss allocation strictly beats
+            Frobenius on measured eval delta at equal bytes, budget
+            feasibility, LP-reference agreement — plus the banded
+            surrogate skip rate and metric-table build wall,
   delta     one delta_vs_cold row per (arch, method): warm-started delta
             recompression speedup over a full cold recompress, plus the
             ISSUE 9 contracts as 1.0-or-0.0 metrics — tile reuse fraction,
@@ -145,6 +150,35 @@ SUITES = {
             "alloc_solves_per_s": lambda r: 1.0 / max(r["solve_s"], 5e-2),
             "budget_feasible": lambda r: (
                 1.0 if r["achieved_bytes"] <= r["budget_bytes"] else 0.0
+            ),
+        },
+    },
+    "BENCH_eval.json": {
+        "suite": "eval",
+        "comparable": ("device",),
+        "key": ("kind", "arch"),
+        "metrics": (),
+        "derived": {
+            # ISSUE 10 contracts as 1.0-or-0.0 metrics: any drop fails at
+            # any tolerance
+            "eval_beats_frobenius": lambda r: (
+                1.0 if r["eval_delta"] < r["frobenius_delta"] else 0.0
+            ),
+            "budget_feasible": lambda r: (
+                1.0
+                if max(r["eval_bytes"], r["frobenius_bytes"])
+                <= r["budget_bytes"]
+                else 0.0
+            ),
+            "lp_within_tolerance": lambda r: (
+                1.0 if r["lp_within_tolerance"] else 0.0
+            ),
+            # tolerance-banded: the surrogate's coverage and the table
+            # build wall (floored — small fixtures sit under scheduler
+            # jitter)
+            "surrogate_skip_rate": lambda r: r["surrogate_skip_rate"],
+            "table_builds_per_s": lambda r: (
+                1.0 / max(r["table_wall_s"], 5e-2)
             ),
         },
     },

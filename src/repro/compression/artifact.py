@@ -37,6 +37,12 @@ MANIFEST_NAME = "compression_manifest.json"
 MANIFEST_FORMAT = "repro.compression/v1"
 
 
+def _entry_leaf_keys(e: dict) -> tuple:
+    """The stored-leaf names of one manifest entry: the int8 baseline packs
+    to {"q", "scale"}, every solver method to {"m_packed", "C"}."""
+    return ("q", "scale") if e.get("method") == "int8" else ("m_packed", "C")
+
+
 @dataclasses.dataclass
 class CompressionArtifact:
     manifest: dict
@@ -156,6 +162,25 @@ class CompressionArtifact:
             r, c = t.d_in // t.tile_n, t.d_out // t.tile_d
             kb = (t.K + 7) // 8
             lead = list(t.shape[:-2])
+            if t.method == "int8":
+                leaf_spec = {
+                    "q": {
+                        "shape": lead + [r, c, t.tile_n, t.tile_d],
+                        "dtype": "int8",
+                    },
+                    "scale": {"shape": lead + [r, c, 1, 1], "dtype": "float32"},
+                }
+            else:
+                leaf_spec = {
+                    "m_packed": {
+                        "shape": lead + [r, c, t.tile_n, kb],
+                        "dtype": "uint8",
+                    },
+                    "C": {
+                        "shape": lead + [r, c, t.K, t.tile_d],
+                        "dtype": t.dtype,
+                    },
+                }
             tensors[t.path] = {
                 "shape": list(t.shape),
                 "dtype": t.dtype,
@@ -172,11 +197,7 @@ class CompressionArtifact:
                 "orig_bytes": t.orig_bytes,
                 "new_bytes": t.pred_bytes,
                 "rel_err": None,
-                "m_packed": {
-                    "shape": lead + [r, c, t.tile_n, kb],
-                    "dtype": "uint8",
-                },
-                "C": {"shape": lead + [r, c, t.K, t.tile_d], "dtype": t.dtype},
+                **leaf_spec,
             }
         manifest = {
             "format": MANIFEST_FORMAT,
@@ -231,32 +252,31 @@ class CompressionArtifact:
                     f"{tuple(e['shape'])} vs {shape}"
                 )
             return {
-                "m_packed": jax.ShapeDtypeStruct(
-                    tuple(e["m_packed"]["shape"]), np.dtype(e["m_packed"]["dtype"])
-                ),
-                "C": jax.ShapeDtypeStruct(
-                    tuple(e["C"]["shape"]), np.dtype(e["C"]["dtype"])
-                ),
+                k: jax.ShapeDtypeStruct(
+                    tuple(e[k]["shape"]), np.dtype(e[k]["dtype"])
+                )
+                for k in _entry_leaf_keys(e)
             }
 
         return rewrite(dense_values, "")
 
     def validate_params(self, params) -> list:
         """Mismatches between the manifest and a params tree ([] == valid).
-        A compressed weight flattens to two leaves, ``<path>/m_packed`` and
-        ``<path>/C`` — the manifest pins their shapes."""
+        A compressed weight flattens to two leaves — ``<path>/m_packed`` and
+        ``<path>/C``, or ``<path>/q`` and ``<path>/scale`` for the int8
+        baseline — whose shapes the manifest pins."""
         from repro.compression.plan import tree_paths
 
         leaves = dict(tree_paths(params))
         problems = []
         for path, e in self.manifest["tensors"].items():
-            mp, cp = f"{path}/m_packed", f"{path}/C"
-            if mp not in leaves or cp not in leaves:
+            keys = _entry_leaf_keys(e)
+            leaf_paths = [f"{path}/{k}" for k in keys]
+            if any(lp not in leaves for lp in leaf_paths):
                 problems.append(f"{path}: not compressed in params")
                 continue
             for leaf_path, leaf, spec in (
-                (mp, leaves[mp], e["m_packed"]),
-                (cp, leaves[cp], e["C"]),
+                (lp, leaves[lp], e[k]) for lp, k in zip(leaf_paths, keys)
             ):
                 if tuple(leaf.shape) != tuple(spec["shape"]):
                     problems.append(

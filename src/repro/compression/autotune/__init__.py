@@ -25,6 +25,7 @@ from repro.compression.autotune.allocate import (
     BudgetInfeasibleError,
     allocate_budget,
     lower_hull,
+    resolve_groups,
 )
 from repro.compression.autotune.calibrate import (
     calibration_inputs,
@@ -33,6 +34,7 @@ from repro.compression.autotune.calibrate import (
 from repro.compression.autotune.probe import (
     ProbeResult,
     RDPoint,
+    TrialSplice,
     candidate_settings,
     probe_tensors,
 )
@@ -45,6 +47,7 @@ from repro.compression.autotune.refine import (
 __all__ = [
     "RDPoint",
     "ProbeResult",
+    "TrialSplice",
     "candidate_settings",
     "probe_tensors",
     "calibration_inputs",
@@ -53,6 +56,7 @@ __all__ = [
     "BudgetInfeasibleError",
     "allocate_budget",
     "lower_hull",
+    "resolve_groups",
     "AutotuneResult",
     "allocation_rules",
     "autotune_plan",

@@ -29,6 +29,7 @@ settings exceed the budget, and never return an allocation over budget.
 from __future__ import annotations
 
 import dataclasses
+import re
 import time
 
 import jax
@@ -40,6 +41,7 @@ __all__ = [
     "BudgetInfeasibleError",
     "allocate_budget",
     "lower_hull",
+    "resolve_groups",
 ]
 
 # Penalty-weight grid for the QUBO engine: each (one_hot A, budget B) combo
@@ -53,13 +55,17 @@ _SLACK_BITS = 6
 
 
 class BudgetInfeasibleError(ValueError):
-    """Budget below the cheapest feasible allocation."""
+    """Budget below the cheapest feasible allocation (globally, or within
+    one per-layer-group cap)."""
 
-    def __init__(self, budget_bytes: int, min_bytes: int):
+    def __init__(self, budget_bytes: int, min_bytes: int,
+                 group: str | None = None):
         self.budget_bytes = int(budget_bytes)
         self.min_bytes = int(min_bytes)
+        self.group = group
+        scope = f"group {group!r} budget" if group else "budget"
         super().__init__(
-            f"budget of {budget_bytes} bytes is infeasible: the cheapest "
+            f"{scope} of {budget_bytes} bytes is infeasible: the cheapest "
             f"allocation needs {min_bytes} bytes "
             f"({min_bytes / 2**20:.2f} MiB)"
         )
@@ -122,10 +128,28 @@ def lower_hull(points) -> list:
     return hull
 
 
-def _check_feasible(hulls: dict, budget_bytes: int) -> int:
+def resolve_groups(group_budgets, paths) -> tuple:
+    """Normalise ``(pattern, cap_bytes)`` pairs (the
+    ``CompressionPolicy.group_budgets`` form) into
+    ``(pattern, frozenset(member_paths), cap_bytes)`` triples over
+    ``paths``.  Patterns matching no path are dropped (a cap on nothing
+    constrains nothing)."""
+    out = []
+    for pattern, cap in group_budgets:
+        members = frozenset(p for p in paths if re.search(pattern, p))
+        if members:
+            out.append((str(pattern), members, int(cap)))
+    return tuple(out)
+
+
+def _check_feasible(hulls: dict, budget_bytes: int, groups=()) -> int:
     base = sum(h[0].bytes for h in hulls.values())
     if base > budget_bytes:
         raise BudgetInfeasibleError(budget_bytes, base)
+    for pattern, members, cap in groups:
+        base_g = sum(hulls[p][0].bytes for p in members)
+        if base_g > cap:
+            raise BudgetInfeasibleError(cap, base_g, group=pattern)
     return base
 
 
@@ -133,6 +157,10 @@ def _totals(hulls: dict, choice: dict):
     b = sum(hulls[p][j].bytes for p, j in choice.items())
     d = sum(hulls[p][j].distortion for p, j in choice.items())
     return int(b), float(d)
+
+
+def _group_spent(hulls: dict, choice: dict, members) -> int:
+    return sum(hulls[p][choice[p]].bytes for p in members)
 
 
 def _edges(hulls: dict) -> list:
@@ -149,27 +177,54 @@ def _edges(hulls: dict) -> list:
     return edges
 
 
-def _greedy(hulls: dict, budget_bytes: int):
-    spent = _check_feasible(hulls, budget_bytes)
+def _greedy(hulls: dict, budget_bytes: int, groups=()):
+    spent = _check_feasible(hulls, budget_bytes, groups)
     choice = {path: 0 for path in hulls}
+    spent_g = [
+        sum(hulls[p][0].bytes for p in members) for _, members, _ in groups
+    ]
+    path_groups = {
+        path: [gi for gi, (_, members, _) in enumerate(groups) if path in members]
+        for path in hulls
+    }
     for _, path, j, cost in _edges(hulls):
         if choice[path] != j:          # prerequisite upgrade was skipped
             continue
-        if spent + cost <= budget_bytes:
-            choice[path] = j + 1
-            spent += cost
+        if spent + cost > budget_bytes:
+            continue
+        if any(
+            spent_g[gi] + cost > groups[gi][2] for gi in path_groups[path]
+        ):
+            continue
+        choice[path] = j + 1
+        spent += cost
+        for gi in path_groups[path]:
+            spent_g[gi] += cost
     return choice
 
 
-def _repair(hulls: dict, choice: dict, budget_bytes: int) -> dict:
+def _repair(hulls: dict, choice: dict, budget_bytes: int, groups=()) -> dict:
     """Downgrade along the hulls (cheapest distortion increase per byte
-    saved first) until the allocation fits the budget.  Terminates because
-    the all-cheapest allocation is feasible."""
+    saved first) until the allocation fits the budget — the global cap and
+    every group cap.  When a group cap is violated only its members are
+    downgrade candidates.  Terminates because the all-cheapest allocation
+    is feasible."""
     choice = dict(choice)
-    spent, _ = _totals(hulls, choice)
-    while spent > budget_bytes:
+    while True:
+        spent, _ = _totals(hulls, choice)
+        candidates = None                 # None = no violation
+        if spent > budget_bytes:
+            candidates = set(hulls)
+        else:
+            for _, members, cap in groups:
+                if _group_spent(hulls, choice, members) > cap:
+                    candidates = set(members)
+                    break
+        if candidates is None:
+            return choice
         best = None
-        for path, j in choice.items():
+        for path in sorted(candidates):
+            j = choice[path]
             if j == 0:
                 continue
             h = hulls[path]
@@ -177,43 +232,67 @@ def _repair(hulls: dict, choice: dict, budget_bytes: int) -> dict:
             cost = h[j - 1].distortion - h[j].distortion
             rate = cost / max(saved, 1)
             if best is None or rate < best[0]:
-                best = (rate, path, saved)
-        _, path, saved = best
+                best = (rate, path)
+        _, path = best
         choice[path] -= 1
-        spent -= saved
-    return choice
 
 
-def _qubo_ising(hulls: dict, budget_bytes: int, base_bytes: int):
+def _qubo_ising(hulls: dict, budget_bytes: int, base_bytes: int, groups=()):
     """Build the batched Ising encoding of the allocation QUBO.
 
     Variables: one choice bit per (tensor, hull point) — including index 0,
     so the one-hot penalty is uniform — plus ``_SLACK_BITS`` binary-fraction
-    slack bits for the inequality budget.  Byte loads are normalised to the
-    budget headroom ``R = budget - sum(cheapest)``; per-tensor distortions
-    are shifted to 0 at their best point and scaled by the global spread.
-    Returns (h (P, n), B (P, n, n), var_index) for the penalty grid.
+    slack bits per inequality (the global budget AND every group cap get
+    their own slack block).  Byte loads are normalised per constraint to
+    its headroom ``R = cap - sum(cheapest members)``; per-tensor
+    distortions are shifted to 0 at their best point and scaled by the
+    global spread.  Returns (h (P, n), B (P, n, n), var_index) for the
+    penalty grid.
     """
     paths = sorted(hulls)
     R = budget_bytes - base_bytes
+    R_g = [
+        cap - sum(hulls[p][0].bytes for p in members)
+        for _, members, cap in groups
+    ]
     var_index = []             # (path, hull_idx) per choice variable
-    rho, dtil = [], []
+    extras, dtil = [], []
     spread = max(
         (h[0].distortion - h[-1].distortion) for h in hulls.values()
     ) or 1.0
     for path in paths:
         h = hulls[path]
+        gids = [
+            gi for gi, (_, members, _) in enumerate(groups) if path in members
+        ]
         for j, pt in enumerate(h):
             extra = pt.bytes - h[0].bytes
-            if extra > R:      # cannot fit even alone: prune
+            # cannot fit even alone (globally or in a group cap): prune
+            if extra > R or any(extra > R_g[gi] for gi in gids):
                 continue
             var_index.append((path, j))
-            rho.append(extra / max(R, 1))
+            extras.append(extra)
             dtil.append((pt.distortion - h[-1].distortion) / spread)
     nc = len(var_index)
-    slack = [2.0 ** -(b + 1) for b in range(_SLACK_BITS)]
-    n = nc + _SLACK_BITS
-    load = np.array(rho + slack, dtype=np.float64)     # budget coefficients
+    slack = np.array(
+        [2.0 ** -(b + 1) for b in range(_SLACK_BITS)], dtype=np.float64
+    )
+    n = nc + (1 + len(groups)) * _SLACK_BITS
+
+    # one normalised load vector per inequality constraint
+    cons = []
+    load = np.zeros(n)
+    load[:nc] = np.array(extras, dtype=np.float64) / max(R, 1)
+    load[nc:nc + _SLACK_BITS] = slack
+    cons.append(load)
+    for gi, (_, members, _) in enumerate(groups):
+        load = np.zeros(n)
+        for v, (path, _) in enumerate(var_index):
+            if path in members:
+                load[v] = extras[v] / max(R_g[gi], 1)
+        s0 = nc + (1 + gi) * _SLACK_BITS
+        load[s0:s0 + _SLACK_BITS] = slack
+        cons.append(load)
 
     hs, Bs = [], []
     for A, Bp in _PENALTY_GRID:
@@ -232,11 +311,12 @@ def _qubo_ising(hulls: dict, budget_bytes: int, base_bytes: int):
                 for v in vs[i + 1:]:
                     Q[u, v] += A
                     Q[v, u] += A
-        # budget penalty: B * (sum_v load_v x_v - 1)^2
-        q += Bp * load * (load - 2.0)
-        outer = Bp * np.outer(load, load)
-        np.fill_diagonal(outer, 0.0)
-        Q += outer
+        # budget penalties: B * (sum_v load_v x_v - 1)^2 per constraint
+        for load in cons:
+            q += Bp * load * (load - 2.0)
+            outer = Bp * np.outer(load, load)
+            np.fill_diagonal(outer, 0.0)
+            Q += outer
         # QUBO -> Ising via x = (1 + s) / 2  (constants dropped)
         h_i = q / 2.0 + Q.sum(axis=1) / 2.0
         B_i = Q / 4.0
@@ -263,13 +343,13 @@ def _decode(x_row: np.ndarray, var_index: list, hulls: dict) -> dict:
 
 
 def _qubo(hulls: dict, budget_bytes: int, *, key, backend, num_sweeps,
-          num_reads):
+          num_reads, groups=()):
     from repro.core import ising
 
-    base = _check_feasible(hulls, budget_bytes)
+    base = _check_feasible(hulls, budget_bytes, groups)
     if budget_bytes - base <= 0 or all(len(h) == 1 for h in hulls.values()):
         return {path: 0 for path in hulls}, 0.0
-    h, B, var_index = _qubo_ising(hulls, budget_bytes, base)
+    h, B, var_index = _qubo_ising(hulls, budget_bytes, base, groups)
     if key is None:
         key = jax.random.PRNGKey(0)
     t0 = time.perf_counter()
@@ -282,7 +362,9 @@ def _qubo(hulls: dict, budget_bytes: int, *, key, backend, num_sweeps,
 
     best = None
     for row in xs:
-        choice = _repair(hulls, _decode(row, var_index, hulls), budget_bytes)
+        choice = _repair(
+            hulls, _decode(row, var_index, hulls), budget_bytes, groups
+        )
         b, d = _totals(hulls, choice)
         if best is None or (d, b) < (best[1], best[2]):
             best = (choice, d, b)
@@ -298,23 +380,28 @@ def allocate_budget(
     backend: str = "auto",
     num_sweeps: int = 96,
     num_reads: int = 8,
+    group_budgets=(),
 ) -> Allocation:
     """Choose one RD point per probed tensor under the byte budget.
 
     ``probes`` is a list of :class:`ProbeResult` (or anything exposing
-    ``path`` and ``points``); ``engine`` is "greedy" or "qubo".  Raises
+    ``path`` and ``points``); ``engine`` is "greedy" or "qubo".
+    ``group_budgets`` is a sequence of ``(path_regex, byte_cap)`` pairs:
+    tensors matching a regex must jointly stay under that cap (a tensor may
+    fall in several groups; every matching cap applies).  Raises
     :class:`BudgetInfeasibleError` when no allocation fits."""
     if engine not in ("greedy", "qubo"):
         raise ValueError(f"unknown allocator engine {engine!r} (greedy|qubo)")
     hulls = {p.path: lower_hull(p.points) for p in probes}
+    groups = resolve_groups(group_budgets, list(hulls))
     if engine == "greedy":
         t0 = time.perf_counter()
-        choice = _greedy(hulls, budget_bytes)
+        choice = _greedy(hulls, budget_bytes, groups)
         solve_s = time.perf_counter() - t0
     else:
         choice, solve_s = _qubo(
             hulls, budget_bytes, key=key, backend=backend,
-            num_sweeps=num_sweeps, num_reads=num_reads,
+            num_sweeps=num_sweeps, num_reads=num_reads, groups=groups,
         )
     total_b, total_d = _totals(hulls, choice)
     return Allocation(

@@ -49,28 +49,47 @@ def calibration_weights(
     *,
     key=None,
     eligible: tuple | None = None,
+    num_batches: int = 1,
 ) -> dict:
-    """Per-tensor sensitivity weights from one calibration forward/backward.
+    """Per-tensor sensitivity weights from calibration forward/backward passes.
 
     Returns ``{path: weight}`` for every float leaf of ``values``,
     normalised to mean 1.0 over ``eligible`` paths (or over all paths when
-    not given).  Deterministic per (values, cfg, inputs/key).
+    not given).  Deterministic per (values, cfg, inputs/key, num_batches):
+    batch 0 draws from ``key`` itself (bit-compatible with the historical
+    single-batch mode), batch i > 0 from ``fold_in(key, i)``, and the raw
+    squared gradients are averaged across batches before normalisation.
+    An explicit ``inputs`` batch overrides drawing and forces one batch.
     """
     from repro.compression.plan import tree_paths
     from repro.models import forward
 
-    if inputs is None:
-        inputs = calibration_inputs(cfg, key=key)
+    if num_batches < 1:
+        raise ValueError(f"num_batches must be >= 1, got {num_batches}")
+    if inputs is not None:
+        batches = [inputs]
+    else:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        batches = [
+            calibration_inputs(
+                cfg, key=key if i == 0 else jax.random.fold_in(key, i)
+            )
+            for i in range(num_batches)
+        ]
 
-    def energy(vals):
-        logits, _, _ = forward(vals, inputs, cfg)
+    def energy(vals, batch):
+        logits, _, _ = forward(vals, batch, cfg)
         return 0.5 * jnp.mean(jnp.square(logits.astype(jnp.float32)))
 
-    grads = jax.grad(energy)(values)
-    raw = {
-        path: float(jnp.mean(jnp.square(g.astype(jnp.float32))))
-        for path, g in tree_paths(grads)
-    }
+    raw: dict = {}
+    for batch in batches:
+        grads = jax.grad(energy)(values, batch)
+        for path, g in tree_paths(grads):
+            raw[path] = raw.get(path, 0.0) + float(
+                jnp.mean(jnp.square(g.astype(jnp.float32)))
+            )
+    raw = {p: w / len(batches) for p, w in raw.items()}
     norm_paths = [p for p in (eligible or raw) if p in raw]
     mean_w = sum(raw[p] for p in norm_paths) / max(len(norm_paths), 1)
     if mean_w <= 0.0:

@@ -27,11 +27,12 @@ import jax.numpy as jnp
 
 from repro.compression.execute import _tensor_keys, _tensor_tiles
 from repro.compression.plan import CompressionPlan, TensorPlan, tree_paths
-from repro.core.compress import compress_tile_batch
+from repro.core.compress import compress_tile_batch, quantize_tile_batch
 
 __all__ = [
     "RDPoint",
     "ProbeResult",
+    "TrialSplice",
     "candidate_settings",
     "probe_tensors",
     "DEFAULT_K_FRACTIONS",
@@ -47,22 +48,42 @@ _PROBE_SALT = 0x70726F62  # "prob"
 
 @dataclasses.dataclass(frozen=True)
 class RDPoint:
-    """One point on a tensor's rate-distortion curve.  ``K == 0`` is the
-    *dense* point: the tensor stays uncompressed (``bytes == orig_bytes``,
-    zero distortion)."""
+    """One point on a tensor's rate-distortion curve.
+
+    ``method`` tags which compression produced the point, making *methods*
+    allocation choices in the same curve: "" inherits the base plan's
+    method (the historical encoding), "int8" is the plain-quantisation
+    baseline column (K == 0 but NOT dense), "dense" is the uncompressed
+    fallback.  The dense point has ``bytes == orig_bytes`` and zero
+    distortion."""
 
     tile_n: int
     tile_d: int
     K: int
     bytes: int
     distortion: float
+    method: str = ""
 
     @property
     def dense(self) -> bool:
-        return self.K == 0
+        return self.K == 0 and self.method in ("", "dense")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialSplice:
+    """Reconstructed trial tiles of one (tensor, candidate) probe, kept
+    when ``probe_tensors(keep_trials=True)`` so the eval metric table
+    (:mod:`repro.eval.metric_table`) can splice the SAME trial compression
+    into the live tree — one solve serves both the Frobenius curve and the
+    eval-loss delta, never re-solved."""
+
+    indices: object    # None (every tile probed) or (S,) sorted tile indices
+    recon: object      # (S, tn, td) f32 reconstruction from the stored factors
+    resid2: float      # full-tensor squared-residual estimate, unweighted
+    num_tiles: int     # tiles in the full tensor (extrapolation factor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,10 +120,32 @@ def _candidate_plan(t: TensorPlan, tn: int, td: int, K: int) -> TensorPlan:
     )
 
 
+def _candidate_plan_int8(t: TensorPlan, tn: int, td: int) -> TensorPlan:
+    """``t`` as the int8-baseline column: closed-form per-tile quantisation
+    at the base geometry, K=0 (no M·C factors), bytes from the {"q",
+    "scale"} layout."""
+    from repro.launch import costing
+
+    r, c = t.d_in // tn, t.d_out // td
+    return dataclasses.replace(
+        t,
+        method="int8",
+        tile_n=tn,
+        tile_d=td,
+        K=0,
+        bbo_iters=0,
+        num_tiles=t.groups * r * c,
+        pred_bytes=costing.int8_weight_bytes(
+            t.d_in, t.d_out, tn, td, groups=t.groups
+        ),
+    )
+
+
 def candidate_settings(
     t: TensorPlan,
     k_fractions: tuple = DEFAULT_K_FRACTIONS,
     tile_d_choices: int = 1,
+    include_int8: bool = False,
 ) -> list:
     """Candidate (tile_n, tile_d, K) settings for one tensor.
 
@@ -110,7 +153,10 @@ def candidate_settings(
     paper-scale 8..16-row tile the planner forces); the grid varies ``K``
     over ``k_fractions`` of tile_n and optionally halves ``tile_d``
     (``tile_d_choices=2``) — a finer C matrix trades bytes for accuracy the
-    same way a higher K does, but with a different slope."""
+    same way a higher K does, but with a different slope.
+    ``include_int8`` appends the plain int8-quantisation baseline at the
+    base geometry as one more allocation column (à la CalibTIP's
+    per-layer precision choices)."""
     tds = [t.tile_d]
     if tile_d_choices > 1 and t.tile_d % 2 == 0 and t.tile_d // 2 >= 4:
         tds.append(t.tile_d // 2)
@@ -122,6 +168,8 @@ def candidate_settings(
                 continue
             seen.add((t.tile_n, td, K))
             out.append(_candidate_plan(t, t.tile_n, td, K))
+    if include_int8:
+        out.append(_candidate_plan_int8(t, t.tile_n, t.tile_d))
     return out
 
 
@@ -155,8 +203,10 @@ def probe_tensors(
     probe_bbo_iters: int | None = 8,
     backend: str | None = None,
     max_pool_tiles: int | None = 4096,
+    include_int8: bool = False,
+    keep_trials: bool = False,
     verbose: bool = False,
-) -> list:
+):
     """Probe every tensor of ``plan`` over its candidate grid.
 
     Returns ``[ProbeResult]`` in plan order.  ``weights`` maps tensor path
@@ -169,7 +219,14 @@ def probe_tensors(
     does — exact probing of a large model must not build the one giant
     batch execute deliberately avoids (chunking never changes
     greedy/alternating results; for BBO the chunk boundaries are part of
-    the deterministic seed story, as in execute)."""
+    the deterministic seed story, as in execute).
+
+    ``include_int8`` adds the plain-quantisation baseline column per tensor
+    (method="int8" RDPoints).  ``keep_trials=True`` changes the return to
+    ``(probes, trials)`` where ``trials`` maps
+    ``(path, tile_n, tile_d, K, method)`` to a :class:`TrialSplice` holding
+    the reconstructed trial tiles — the amortisation hook the eval metric
+    table builds on (one trial compression, two uses)."""
     if key is None:
         key = jax.random.PRNGKey(0)
     backend = backend or plan.policy.solver_backend
@@ -179,8 +236,11 @@ def probe_tensors(
     # -- probe jobs, pooled across tensors by candidate geometry -----------
     pools: dict = {}   # pool_key -> [(t, ct)]
     curves: dict = {t.path: [] for t in plan.tensors}
+    trials: dict = {}
     for t in plan.tensors:
-        for ct in candidate_settings(t, k_fractions, tile_d_choices):
+        for ct in candidate_settings(
+            t, k_fractions, tile_d_choices, include_int8=include_int8
+        ):
             if probe_bbo_iters and ct.method == "bbo":
                 ct = dataclasses.replace(
                     ct, bbo_iters=min(ct.bbo_iters, probe_bbo_iters)
@@ -195,7 +255,7 @@ def probe_tensors(
     # holds about one float32 copy of the eligible tensors, never the
     # whole K-grid at once.
     probe_key = jax.random.fold_in(key, _PROBE_SALT)
-    geom_cache: dict = {}   # (path, tn, td) -> (tiles, keys, norms2)
+    geom_cache: dict = {}   # (path, tn, td) -> (tiles, keys, norms2, idx)
     for pidx, (pool_key, jobs) in enumerate(sorted(pools.items())):
         tn, td, K, method, bbo_iters = pool_key
         tiles_parts, keys_parts, norms_parts = [], [], []
@@ -208,9 +268,9 @@ def probe_tensors(
                 if idx is not None:
                     tiles, tile_keys = tiles[idx], tile_keys[idx]
                 geom_cache[gk] = (
-                    tiles, tile_keys, jnp.sum(tiles * tiles, axis=(1, 2))
+                    tiles, tile_keys, jnp.sum(tiles * tiles, axis=(1, 2)), idx
                 )
-            tiles, tile_keys, norms2 = geom_cache[gk]
+            tiles, tile_keys, norms2, _ = geom_cache[gk]
             tiles_parts.append(tiles)
             keys_parts.append(tile_keys)
             norms_parts.append(norms2)
@@ -218,16 +278,30 @@ def probe_tensors(
         all_keys = jnp.concatenate(keys_parts)
         total = all_tiles.shape[0]
         chunk = total if not max_pool_tiles else min(total, max_pool_tiles)
-        err_parts = []
+        err_parts, fac_parts = [], []
         for ci, start_ix in enumerate(range(0, total, chunk)):
-            _, _, e = compress_tile_batch(
-                all_tiles[start_ix:start_ix + chunk],
-                all_keys[start_ix:start_ix + chunk],
-                jax.random.fold_in(jax.random.fold_in(probe_key, pidx), ci),
-                K, method, bbo_iters=max(bbo_iters, 1), backend=backend,
-            )
+            if method == "int8":
+                # closed-form baseline: no solver, keys unused
+                fa, fb, e = quantize_tile_batch(
+                    all_tiles[start_ix:start_ix + chunk]
+                )
+            else:
+                fa, fb, e = compress_tile_batch(
+                    all_tiles[start_ix:start_ix + chunk],
+                    all_keys[start_ix:start_ix + chunk],
+                    jax.random.fold_in(jax.random.fold_in(probe_key, pidx), ci),
+                    K, method, bbo_iters=max(bbo_iters, 1), backend=backend,
+                )
             err_parts.append(e)
+            if keep_trials:
+                fac_parts.append((fa, fb))
         errs = err_parts[0] if len(err_parts) == 1 else jnp.concatenate(err_parts)
+        if keep_trials:
+            if len(fac_parts) == 1:
+                fA, fB = fac_parts[0]
+            else:
+                fA = jnp.concatenate([f[0] for f in fac_parts])
+                fB = jnp.concatenate([f[1] for f in fac_parts])
         if verbose:
             print(
                 f"  probe {method} {tn}x{td} K={K}: {all_tiles.shape[0]} "
@@ -237,11 +311,14 @@ def probe_tensors(
         for (t, ct), norms2 in zip(jobs, norms_parts):
             n = norms2.shape[0]
             err = errs[start:start + n]
-            start += n
             # err is sqrt(objective)/||W_t||: squared residual per tile is
             # err^2 * ||W_t||^2; scale the sampled mean to the full tensor.
             resid2 = jnp.mean(err.astype(jnp.float32) ** 2 * norms2)
             w = float(weights.get(t.path, 1.0))
+            # "" = inherit the base plan's method (historical encoding,
+            # keeps pre-method RDPoints comparable); only the extra
+            # baseline column is tagged explicitly
+            pt_method = "int8" if ct.method == "int8" else ""
             curves[t.path].append(
                 RDPoint(
                     tile_n=ct.tile_n,
@@ -249,8 +326,32 @@ def probe_tensors(
                     K=ct.K,
                     bytes=int(ct.pred_bytes),
                     distortion=float(resid2) * ct.num_tiles * w,
+                    method=pt_method,
                 )
             )
+            if keep_trials:
+                a, b = fA[start:start + n], fB[start:start + n]
+                if method == "int8":
+                    # stored form: int8 q times f32 scale
+                    recon = a.astype(jnp.float32) * b
+                else:
+                    # reconstruct from the STORED factors (C cast to the
+                    # tensor dtype, as execute packs it) so a splice
+                    # measures exactly what serving would see
+                    recon = jnp.einsum(
+                        "tnk,tkd->tnd",
+                        a,
+                        b.astype(jnp.dtype(t.dtype)).astype(jnp.float32),
+                    )
+                trials[(t.path, ct.tile_n, ct.tile_d, ct.K, pt_method)] = (
+                    TrialSplice(
+                        indices=geom_cache[(t.path, ct.tile_n, ct.tile_d)][3],
+                        recon=recon,
+                        resid2=float(resid2) * ct.num_tiles,
+                        num_tiles=ct.num_tiles,
+                    )
+                )
+            start += n
 
     # -- RD curves: dense fallback + candidates, ascending bytes -----------
     out = []
@@ -268,4 +369,6 @@ def probe_tensors(
                 points=tuple(pts),
             )
         )
+    if keep_trials:
+        return out, trials
     return out

@@ -41,6 +41,8 @@ class AutotuneResult:
     weights: dict | None
     probe_s: float = 0.0   # wall-clock diagnostics live here, NOT in the
                            # plan metadata: plans are deterministic per key
+    metric_table: object = None   # eval_loss objective only (MetricTable)
+    lp_check: dict | None = None
 
 
 def allocation_rules(allocation: Allocation, base_plan: CompressionPlan) -> tuple:
@@ -59,6 +61,16 @@ def allocation_rules(allocation: Allocation, base_plan: CompressionPlan) -> tupl
         pattern = f"^{re.escape(path)}$"
         if pt.dense:
             rules.append(CompressionRule(pattern=pattern, method="skip"))
+        elif pt.method == "int8":
+            # the plain-quantisation baseline column: closed-form, no rank
+            rules.append(
+                CompressionRule(
+                    pattern=pattern,
+                    method="int8",
+                    tile_n=pt.tile_n,
+                    tile_d=pt.tile_d,
+                )
+            )
         else:
             t = base[path]
             rules.append(
@@ -101,10 +113,12 @@ def _verify_refined(
                 f"({t.tile_n}, {t.tile_d}, {t.K}) != allocated "
                 f"({pt.tile_n}, {pt.tile_d}, {pt.K}) at {path}"
             )
-        if t.method != base[path].method:
+        # "" inherits the base plan's method; "int8" pins the baseline
+        want_method = pt.method or base[path].method
+        if t.method != want_method:
             raise RuntimeError(
                 f"autotune: refined plan method {t.method!r} != probed "
-                f"method {base[path].method!r} at {path}"
+                f"method {want_method!r} at {path}"
             )
 
 
@@ -115,9 +129,19 @@ def autotune_plan(
     *,
     key=None,
     engine: str = "greedy",
+    objective: str = "frobenius",
     cfg=None,
     calibration=False,
     calibration_inputs: dict | None = None,
+    calib_batches: int = 1,
+    eval_batches: int = 4,
+    eval_batch: int = 2,
+    eval_seq: int = 32,
+    eval_seed: int = 0,
+    surrogate_margin: float = 0.25,
+    int8_baseline: bool | None = None,
+    lp_check: bool | None = None,
+    lp_tolerance: float = 0.05,
     max_probe_tiles: int | None = 16,
     tile_d_choices: int = 1,
     k_fractions: tuple | None = None,
@@ -135,48 +159,111 @@ def autotune_plan(
     allocator ("greedy" | "qubo"; the QUBO path is additionally
     cross-checked against greedy and the gap recorded).  ``calibration``
     weights probed distortion by activation-sensitivity second moments from
-    a calibration batch (requires ``cfg``; pass ``calibration_inputs`` to
-    supply your own batch).  ``max_probe_tiles=None`` probes every tile.
+    ``calib_batches`` calibration batches (requires ``cfg``; pass
+    ``calibration_inputs`` to supply your own batch).
+    ``max_probe_tiles=None`` probes every tile.
+
+    ``objective`` selects what the allocator minimises: "frobenius" is the
+    weight-space distortion proxy; "eval_loss" builds a per-tensor eval
+    degradation table (:mod:`repro.eval.metric_table` — requires ``cfg``)
+    and allocates against measured eval-loss deltas, with
+    ``eval_batches/eval_batch/eval_seq/eval_seed`` fixing the harness and
+    ``surrogate_margin`` controlling how far from the allocation boundary
+    the first-order surrogate may stand in for exact splicing.
+    ``int8_baseline`` adds the plain per-tile int8 quantisation as an
+    allocation column (defaults to on for "eval_loss", off for
+    "frobenius").  ``lp_check`` cross-checks the allocation against the
+    exact MCKP reference solver (:mod:`repro.eval.allocate_lp`; defaults to
+    on for "eval_loss") and records the gap in the plan metadata.
+    ``policy.group_budgets`` caps are honoured by every engine.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    if objective not in ("frobenius", "eval_loss"):
+        raise ValueError(
+            f"unknown objective {objective!r} (frobenius|eval_loss)"
+        )
     base_plan = plan_compression(values, policy)
     if not base_plan.tensors:
         raise ValueError(
             "autotune: the base policy plans no tensors (nothing to allocate)"
         )
+    include_int8 = (
+        (objective == "eval_loss") if int8_baseline is None else int8_baseline
+    )
+    run_lp = (objective == "eval_loss") if lp_check is None else lp_check
 
     weights = None
-    if calibration:
+    if calibration or objective == "eval_loss":
         if cfg is None:
             raise ValueError(
-                "autotune: calibration needs cfg — the calibration "
-                "forward/backward runs the model (pass calibration_inputs "
+                "autotune: calibration needs cfg (so does the eval_loss "
+                "objective — both run the model; pass calibration_inputs "
                 "as well to supply your own batch)"
             )
         weights = calibration_weights(
             values, cfg, inputs=calibration_inputs, key=key,
             eligible=tuple(t.path for t in base_plan.tensors),
+            num_batches=calib_batches,
         )
 
     t0 = time.perf_counter()
     probe_kw = {} if k_fractions is None else {"k_fractions": tuple(k_fractions)}
-    probes = probe_tensors(
-        values, base_plan, key=key, weights=weights,
-        max_probe_tiles=max_probe_tiles, tile_d_choices=tile_d_choices,
-        probe_bbo_iters=probe_bbo_iters, backend=backend, verbose=verbose,
-        **probe_kw,
-    )
+    table = None
+    if objective == "eval_loss":
+        from repro.eval import EvalHarness, build_metric_table
+
+        harness = EvalHarness(
+            cfg, num_batches=eval_batches, batch=eval_batch,
+            seq_len=eval_seq, seed=eval_seed,
+        )
+        table = build_metric_table(
+            values, base_plan, harness, budget_bytes, key=key,
+            weights=weights, max_probe_tiles=max_probe_tiles,
+            tile_d_choices=tile_d_choices, probe_bbo_iters=probe_bbo_iters,
+            backend=backend, include_int8=include_int8,
+            surrogate_margin=surrogate_margin,
+            group_budgets=policy.group_budgets, verbose=verbose,
+            **probe_kw,
+        )
+        probes = table.probes()
+    else:
+        probes = probe_tensors(
+            values, base_plan, key=key, weights=weights,
+            max_probe_tiles=max_probe_tiles, tile_d_choices=tile_d_choices,
+            probe_bbo_iters=probe_bbo_iters, backend=backend,
+            include_int8=include_int8, verbose=verbose,
+            **probe_kw,
+        )
     probe_s = time.perf_counter() - t0
 
     allocation = allocate_budget(
         probes, budget_bytes, engine=engine, key=key,
         backend=backend or policy.solver_backend,
         num_sweeps=num_sweeps, num_reads=num_reads,
+        group_budgets=policy.group_budgets,
     )
+    lp_result = None
+    if run_lp:
+        from repro.eval import cross_check_lp
+
+        lp_result = cross_check_lp(
+            probes, budget_bytes, allocation,
+            group_budgets=policy.group_budgets, tolerance=lp_tolerance,
+        )
+        if verbose:
+            print(
+                f"  lp cross-check [{lp_result['status']}]: gap "
+                f"{lp_result['relative_gap']:+.2%} "
+                f"(tolerance {lp_tolerance:.0%})"
+            )
+
     cross_check = None
     if engine == "qubo":
-        ref = allocate_budget(probes, budget_bytes, engine="greedy")
+        ref = allocate_budget(
+            probes, budget_bytes, engine="greedy",
+            group_budgets=policy.group_budgets,
+        )
         cross_check = {
             "greedy_distortion": ref.total_distortion,
             "greedy_bytes": ref.total_bytes,
@@ -202,18 +289,40 @@ def autotune_plan(
     metadata = {
         "budget_bytes": int(budget_bytes),
         "engine": allocation.engine,
+        "objective": objective,
         "predicted_bytes": allocation.total_bytes,
         "predicted_distortion": allocation.total_distortion,
         "calibrated": weights is not None,
         "probe": {
             "max_probe_tiles": max_probe_tiles,
             "tile_d_choices": tile_d_choices,
+            "int8_baseline": include_int8,
         },
         "allocation": {
             path: pt.to_dict()
             for path, pt in sorted(allocation.choices.items())
         },
     }
+    if weights is not None:
+        # batch count + key make calibrated allocations byte-reproducible
+        metadata["calibration"] = {
+            "num_batches": int(calib_batches),
+            "key": [int(v) for v in jax.random.key_data(key).flatten()],
+        }
+    if policy.group_budgets:
+        metadata["group_budgets"] = [
+            [p, int(b)] for p, b in policy.group_budgets
+        ]
+    if table is not None:
+        metadata["eval"] = {
+            **table.harness_info,
+            "baseline_loss": table.baseline.loss,
+            "alpha": table.alpha,
+            "surrogate_skip_rate": table.surrogate_skip_rate,
+            "exact_paths": len(table.exact_paths),
+        }
+    if lp_result is not None:
+        metadata["lp_check"] = lp_result
     if cross_check is not None:
         metadata["cross_check"] = cross_check
     refined = dataclasses.replace(refined, autotune=metadata)
@@ -224,4 +333,6 @@ def autotune_plan(
         probes=tuple(probes),
         weights=weights,
         probe_s=probe_s,
+        metric_table=table,
+        lp_check=lp_result,
     )

@@ -194,6 +194,14 @@ def _anchor(artifact: CompressionArtifact, prev_params, new_values):
     leaf_order = {p: i for i, (p, _) in enumerate(tree_paths(new_values))}
     plans = []
     for path, entry in manifest["tensors"].items():
+        if entry.get("method") == "int8":
+            # the closed-form baseline has no warm-startable M/C factors
+            # (re-quantising IS the cold solve) — keep delta semantics
+            # uniform by forcing the cold path for the whole artifact
+            raise ColdStartRequired(
+                f"manifested tensor {path!r} uses the int8 baseline, which "
+                "has no warm-startable factors; cold compression required"
+            )
         leaf = leaves_new.get(path)
         if leaf is None:
             raise ColdStartRequired(

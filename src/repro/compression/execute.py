@@ -36,7 +36,9 @@ from repro.compression.plan import CompressionPlan, TensorPlan, tree_paths
 from repro.core import decomposition as dec
 from repro.core import features as feat
 from repro.core import quantized
-from repro.core.compress import compress_tile_batch, tile_matrix
+from repro.core.compress import (
+    compress_tile_batch, quantize_tile_batch, tile_matrix,
+)
 
 __all__ = [
     "execute_plan",
@@ -187,6 +189,25 @@ def _shard_pool(tiles, keys, mesh):
     return tiles, keys, True
 
 
+def _pack_tensor_int8(t: TensorPlan, q_seg, scale_seg):
+    """Pooled rows for one tensor -> the int8-baseline {"q", "scale"} leaf
+    (q (..., r, c, tn, td) int8, scale (..., r, c, 1, 1) f32)."""
+    r, c = t.d_in // t.tile_n, t.d_out // t.tile_d
+    lead = t.shape[:-2]
+    q = q_seg.reshape(*lead, r, c, t.tile_n, t.tile_d)
+    scale = scale_seg.reshape(*lead, r, c, 1, 1)
+    return {"q": q, "scale": scale}
+
+
+@jax.jit
+def _int8_tile_residuals(tiles, q_seg, scale_seg):
+    """Per-tile ``||W_t - scale_t q_t||_F`` — the int8 analogue of
+    :func:`tile_residuals` against the stored representation."""
+    V = q_seg.astype(jnp.float32) * scale_seg.astype(jnp.float32)
+    d = tiles.astype(jnp.float32) - V
+    return jnp.sqrt(jnp.sum(d * d, axis=(1, 2)))
+
+
 def _pack_tensor(t: TensorPlan, M_seg, C_seg, dtype):
     """Pooled rows for one tensor -> the {"m_packed", "C"} leaf.  Leading
     stack dims are preserved (a 4D (L, E, d, f) expert stack packs to
@@ -264,10 +285,15 @@ def execute_plan(
                         "running replicated"
                     )
             chunk_sizes.append(int(ct.shape[0]))
-            parts.append(compress_tile_batch(
-                ct, ck, jax.random.fold_in(bbo_key, ci), K, method,
-                bbo_iters=max(bbo_iters, 1), backend=backend,
-            ))
+            if method == "int8":
+                # closed-form baseline: no solver, keys unused (the rounding
+                # is deterministic regardless of chunking)
+                parts.append(quantize_tile_batch(ct))
+            else:
+                parts.append(compress_tile_batch(
+                    ct, ck, jax.random.fold_in(bbo_key, ci), K, method,
+                    bbo_iters=max(bbo_iters, 1), backend=backend,
+                ))
         if len(parts) == 1:
             M, C, errs = parts[0]
         else:
@@ -318,15 +344,38 @@ def execute_plan(
             out.append(leaf)
             continue
         M_seg, C_seg, err_seg = results[path]
-        w = _pack_tensor(t, M_seg, C_seg, leaf.dtype)
-        nb = quantized.compressed_num_bytes(w)
         err = float(jnp.mean(err_seg))
-        # per-tile residual against the STORED representation (cast C) —
-        # the baseline the delta drift metric compares against
-        resid = tile_residuals(
-            _tensor_tiles(leaf, t), M_seg,
-            w["C"].reshape(-1, t.K, t.tile_d),
-        )
+        # per-tile residual against the STORED representation (cast C /
+        # int8 q·scale) — the baseline the delta drift metric compares
+        # against
+        if t.method == "int8":
+            w = _pack_tensor_int8(t, M_seg, C_seg)
+            nb = quantized.intquant_num_bytes(w)
+            resid = _int8_tile_residuals(_tensor_tiles(leaf, t), M_seg, C_seg)
+            leaf_spec = {
+                "q": {
+                    "shape": list(w["q"].shape),
+                    "dtype": str(w["q"].dtype),
+                },
+                "scale": {
+                    "shape": list(w["scale"].shape),
+                    "dtype": str(w["scale"].dtype),
+                },
+            }
+        else:
+            w = _pack_tensor(t, M_seg, C_seg, leaf.dtype)
+            nb = quantized.compressed_num_bytes(w)
+            resid = tile_residuals(
+                _tensor_tiles(leaf, t), M_seg,
+                w["C"].reshape(-1, t.K, t.tile_d),
+            )
+            leaf_spec = {
+                "m_packed": {
+                    "shape": list(w["m_packed"].shape),
+                    "dtype": str(w["m_packed"].dtype),
+                },
+                "C": {"shape": list(w["C"].shape), "dtype": str(w["C"].dtype)},
+            }
         compressed.append((path, t.orig_bytes, nb, err))
         manifest_tensors[path] = {
             "shape": list(t.shape),
@@ -345,11 +394,7 @@ def execute_plan(
             "new_bytes": int(nb),
             "rel_err": err,
             "tile_resid": [float(f"{v:.8g}") for v in np.asarray(resid)],
-            "m_packed": {
-                "shape": list(w["m_packed"].shape),
-                "dtype": str(w["m_packed"].dtype),
-            },
-            "C": {"shape": list(w["C"].shape), "dtype": str(w["C"].dtype)},
+            **leaf_spec,
         }
         out.append(w)
         if verbose:

@@ -330,11 +330,21 @@ def plan_compression(
         if tn is None or td is None:
             skipped.append((path, f"indivisible dims {tuple(leaf.shape)}"))
             continue
-        K = max(int(round(settings.rank_ratio * tn)), 1)
-        if K >= tn:
-            skipped.append((path, "K >= tile_n (no compression)"))
-            continue
         itemsize = np.dtype(leaf.dtype).itemsize
+        if settings.method == "int8":
+            # closed-form baseline: no rank, K=0 marks "no M·C factors"
+            K = 0
+            pred_bytes = costing.int8_weight_bytes(
+                d_in, d_out, tn, td, groups=groups
+            )
+        else:
+            K = max(int(round(settings.rank_ratio * tn)), 1)
+            if K >= tn:
+                skipped.append((path, "K >= tile_n (no compression)"))
+                continue
+            pred_bytes = costing.compressed_weight_bytes(
+                d_in, d_out, tn, td, K, itemsize, groups=groups
+            )
         tensors.append(
             TensorPlan(
                 path=path,
@@ -349,9 +359,7 @@ def plan_compression(
                 rule=settings.rule,
                 num_tiles=int(groups * (d_in // tn) * (d_out // td)),
                 orig_bytes=costing.dense_weight_bytes(leaf.shape, itemsize),
-                pred_bytes=costing.compressed_weight_bytes(
-                    d_in, d_out, tn, td, K, itemsize, groups=groups
-                ),
+                pred_bytes=pred_bytes,
                 bbo_iters=settings.bbo_iters if settings.method == "bbo" else 0,
             )
         )

@@ -50,7 +50,11 @@ DEFAULT_EXCLUDE = ("norm", "router", "embed", "conv", "A_log", "dt_bias", "D")
 # scan).  Overridable per policy — the predicate is policy data, not code.
 DEFAULT_TARGETS = (r"/w$", r"/(gate|up|down)$")
 
-_METHODS = ("greedy", "alternating", "bbo", "skip")
+# "int8" is the plain symmetric per-tile integer-quantisation baseline
+# (no solver, closed form — core.compress.quantize_tile_batch).  It exists
+# so the byte-budget allocator's baseline column is executable, not
+# hypothetical (docs/eval.md).
+_METHODS = ("greedy", "alternating", "bbo", "int8", "skip")
 
 
 class ResolvedSettings(NamedTuple):
@@ -107,6 +111,9 @@ class CompressionPolicy:
     exclude: tuple = DEFAULT_EXCLUDE
     targets: tuple = DEFAULT_TARGETS  # path regexes: candidates must match one
     rules: tuple = ()               # ordered CompressionRule, first match wins
+    group_budgets: tuple = ()       # (path regex, byte cap) per layer group —
+                                    # honoured by the budget allocators
+                                    # (greedy/QUBO/LP, docs/eval.md)
 
     def __post_init__(self):
         if self.method not in _METHODS[:-1]:
@@ -114,8 +121,17 @@ class CompressionPolicy:
         object.__setattr__(self, "exclude", tuple(self.exclude))
         object.__setattr__(self, "targets", tuple(self.targets))
         object.__setattr__(self, "rules", tuple(self.rules))
+        object.__setattr__(
+            self,
+            "group_budgets",
+            tuple((str(p), int(b)) for p, b in self.group_budgets),
+        )
         for t in self.targets:
             re.compile(t)           # fail fast on bad regexes
+        for p, b in self.group_budgets:
+            re.compile(p)
+            if b <= 0:
+                raise ValueError(f"group budget {p!r}: bytes must be > 0")
 
     # -- resolution ---------------------------------------------------------
     def matches_target(self, path: str) -> bool:
@@ -170,6 +186,7 @@ class CompressionPolicy:
             {k: v for k, v in dataclasses.asdict(r).items() if v is not None}
             for r in self.rules
         ]
+        d["group_budgets"] = [[p, int(b)] for p, b in self.group_budgets]
         return d
 
     def to_json(self, indent: int | None = 2) -> str:
@@ -182,6 +199,9 @@ class CompressionPolicy:
         d["targets"] = tuple(d.get("targets", DEFAULT_TARGETS))
         d["rules"] = tuple(
             CompressionRule(**r) for r in d.get("rules", ())
+        )
+        d["group_budgets"] = tuple(
+            (p, int(b)) for p, b in d.get("group_budgets", ())
         )
         return cls(**d)
 

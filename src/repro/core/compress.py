@@ -38,6 +38,7 @@ __all__ = [
     "compress_matrix",
     "compress_params",
     "compress_tile_batch",
+    "quantize_tile_batch",
     "CompressionReport",
     "tile_matrix",
     "pick_tile",
@@ -185,6 +186,31 @@ def compress_tile_batch(
         / jnp.maximum(jnp.linalg.norm(W_t), 1e-30)
     )(M, tiles)
     return M, C, err
+
+
+@jax.jit
+def quantize_tile_batch(tiles: jax.Array):
+    """tiles (T, tn, td) -> (q (T, tn, td) int8, scale (T, 1, 1) f32,
+    rel_err (T,)).
+
+    Symmetric per-tile int8 rounding: ``scale = max|W_t| / 127``,
+    ``q = clip(round(W_t / scale), -127, 127)``.  No solver, no keys —
+    the closed form is the allocator's executable baseline column (the
+    plain integer quantisation the paper's M·C decomposition competes
+    against).  ``rel_err`` matches :func:`compress_tile_batch` semantics:
+    ``||W_t - scale·q||_F / max(||W_t||_F, 1e-30)``.
+    """
+    tiles = tiles.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(tiles), axis=(1, 2), keepdims=True)
+    scale = amax / 127.0
+    safe = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(tiles / safe), -127.0, 127.0).astype(jnp.int8)
+    recon = q.astype(jnp.float32) * scale
+    resid = tiles - recon
+    err = jnp.sqrt(jnp.sum(resid * resid, axis=(1, 2))) / jnp.maximum(
+        jnp.sqrt(jnp.sum(tiles * tiles, axis=(1, 2))), 1e-30
+    )
+    return q, scale, err
 
 
 def _compress_tiles(

@@ -36,6 +36,10 @@ __all__ = [
     "decompress",
     "compressed_num_bytes",
     "dense_num_bytes",
+    "is_intquant",
+    "apply_intquant",
+    "dequantize",
+    "intquant_num_bytes",
     "register_bitlinear",
     "register_bitlinear_fused",
     "register_bitlinear_grouped",
@@ -45,6 +49,14 @@ __all__ = [
 ]
 
 _KEYS = frozenset({"m_packed", "C"})
+
+# The int-quantize baseline column (symmetric per-tile int8 rounding, no
+# solver — docs/eval.md) stores a dense weight as
+#     {"q":     int8  (..., r, c, tn, td),   # rounded tile values
+#      "scale": f32   (..., r, c, 1, 1)}     # per-tile scale, W_hat = scale*q
+# Served by dequant-einsum only: there is no fused kernel for this layout
+# (it exists as the allocator's executable baseline, not a hot path).
+_INT8_KEYS = frozenset({"q", "scale"})
 
 # Kernel hooks:
 #   _BITLINEAR_IMPL       partial hook, z = x @ M per tile (keeps the
@@ -284,6 +296,50 @@ def apply_compressed(x: jax.Array, w: dict) -> jax.Array:
     if _BITLINEAR_FUSED_IMPL is not None:
         return _apply_fused(x, w)
     return apply_compressed_einsum(x, w)
+
+
+def is_intquant(w) -> bool:
+    """Int8-baseline weight: {"q", "scale"} per-tile container (the
+    allocator's plain-quantisation column, docs/eval.md)."""
+    return isinstance(w, dict) and _INT8_KEYS.issubset(w.keys())
+
+
+def dequantize(w: dict, dtype=None) -> jax.Array:
+    """Materialise W_hat = scale * q.  Leading stack dims (grouped expert
+    weights) are preserved: (..., r, c, tn, td) -> (..., r*tn, c*td)."""
+    q, scale = w["q"], w["scale"]
+    dtype = dtype or scale.dtype
+    tiles = q.astype(jnp.float32) * scale                   # (..., r, c, tn, td)
+    r, c, tn, td = tiles.shape[-4:]
+    lead = tiles.shape[:-4]
+    perm = tuple(range(len(lead))) + tuple(
+        len(lead) + ax for ax in (0, 2, 1, 3)
+    )
+    return tiles.transpose(perm).reshape(*lead, r * tn, c * td).astype(dtype)
+
+
+def apply_intquant(x: jax.Array, w: dict) -> jax.Array:
+    """y = x @ (scale * q) via per-tile dequant-einsum.  4D tiles take the
+    layer path (x (..., d_in)); 5D grouped stacks take the MoE dispatch
+    layout (x (E, ..., d_in)), mirroring ``apply_compressed_grouped``."""
+    q, scale = w["q"], w["scale"]
+    W = q.astype(x.dtype) * scale.astype(x.dtype)           # (..., r, c, tn, td)
+    if q.ndim == 5:
+        E, r, c, tn, td = q.shape
+        assert x.shape[0] == E, (x.shape, q.shape)
+        lead = x.shape[1:-1]
+        xt = x.reshape(E, -1, r, tn)
+        y = jnp.einsum("etrn,ercnd->etcd", xt, W)
+        return y.reshape(E, *lead, c * td)
+    r, c, tn, td = q.shape
+    lead = x.shape[:-1]
+    xt = x.reshape(*lead, r, tn)
+    y = jnp.einsum("...rn,rcnd->...cd", xt, W)
+    return y.reshape(*lead, c * td)
+
+
+def intquant_num_bytes(w: dict) -> int:
+    return w["q"].size + w["scale"].size * w["scale"].dtype.itemsize
 
 
 def compressed_num_bytes(w: dict) -> int:

@@ -1,0 +1,34 @@
+"""Task-metric evaluation: measure compression damage in eval-loss units.
+
+The Frobenius objective the autotuner minimises is a weight-space proxy;
+this package measures the real thing — the model's eval loss on a
+deterministic batch set — and turns per-tensor degradation tables into
+rate-distortion curves the existing budget allocators consume unchanged:
+
+- :mod:`repro.eval.harness` — deterministic eval-batch runner with a
+  baseline cache (the dense forward runs once per (cfg, seed, batches)).
+- :mod:`repro.eval.metric_table` — per-tensor x per-(K, tile_d, method)
+  eval-loss-delta tables built by splicing the probe stage's trial
+  compressions into the live tree, with a first-order surrogate skipping
+  exact eval for tensors far from the allocation boundary.
+- :mod:`repro.eval.allocate_lp` — exact MCKP reference allocator (branch
+  and bound over the hulls, LP-relaxation bound) cross-checking the
+  QUBO/greedy engines, a la CalibTIP's ILP formulation.
+
+Wired through ``plan_compression(..., objective="eval_loss")`` — see
+docs/eval.md.
+"""
+
+from repro.eval.allocate_lp import cross_check_lp, solve_mckp
+from repro.eval.harness import EvalHarness, EvalResult, clear_baseline_cache
+from repro.eval.metric_table import MetricTable, build_metric_table
+
+__all__ = [
+    "EvalHarness",
+    "EvalResult",
+    "MetricTable",
+    "build_metric_table",
+    "clear_baseline_cache",
+    "cross_check_lp",
+    "solve_mckp",
+]

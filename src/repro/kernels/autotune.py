@@ -462,6 +462,10 @@ def tune_artifact(
     seen: set[str] = set()
     n_tuned = 0
     for path, entry in manifest.get("tensors", {}).items():
+        if entry.get("method") == "int8":
+            # int8-baseline tensors serve via dequant-einsum only (no
+            # {"m_packed", "C"} factors, no fused kernel to schedule)
+            continue
         E, n_r, n_c, tn, kb, K, td, dtype = _entry_geometry(entry)
         kind = "bitlinear_grouped" if E else "bitlinear"
         for T in T_values:

@@ -240,7 +240,7 @@ def main() -> None:
     ap.add_argument("--plan-only", action="store_true",
                     help="print the plan (predicted bytes/ratio) and exit")
     ap.add_argument("--method", default="alternating",
-                    choices=["greedy", "alternating", "bbo"])
+                    choices=["greedy", "alternating", "bbo", "int8"])
     ap.add_argument("--tile-n", type=int, default=32)
     ap.add_argument("--tile-d", type=int, default=128)
     ap.add_argument("--rank-ratio", type=float, default=0.125)
@@ -264,6 +264,21 @@ def main() -> None:
                          "second moments from a calibration batch")
     ap.add_argument("--calib-batch", type=int, default=None)
     ap.add_argument("--calib-seq", type=int, default=None)
+    ap.add_argument("--calib-batches", type=int, default=None,
+                    help="calibration batches averaged into the sensitivity "
+                         "weights (default 1; batch count and key land in "
+                         "the plan metadata for byte-determinism)")
+    ap.add_argument("--objective", default="frobenius",
+                    choices=["frobenius", "eval-loss"],
+                    help="what the budget allocator minimises: weight-space "
+                         "Frobenius distortion, or measured eval-loss "
+                         "deltas from the task-metric evaluation subsystem "
+                         "(docs/eval.md; requires --budget-mb)")
+    ap.add_argument("--eval-batches", type=int, default=None,
+                    help="eval harness batches for --objective eval-loss "
+                         "(default 4)")
+    ap.add_argument("--eval-seq", type=int, default=None,
+                    help="eval harness sequence length (default 32)")
     ap.add_argument("--probe-tiles", type=int, default=None,
                     help="trial-compressed tiles per (tensor, candidate); "
                          "0 probes every tile (exact, slower; default 16)")
@@ -338,7 +353,12 @@ def main() -> None:
                 ("--calibrate", args.calibrate or None),
                 ("--calib-batch", args.calib_batch),
                 ("--calib-seq", args.calib_seq),
+                ("--calib-batches", args.calib_batches),
                 ("--probe-tiles", args.probe_tiles),
+                ("--objective",
+                 args.objective if args.objective != "frobenius" else None),
+                ("--eval-batches", args.eval_batches),
+                ("--eval-seq", args.eval_seq),
             ) if val is not None
         ]
         if stray:
@@ -346,8 +366,22 @@ def main() -> None:
                      "(the autotune path)")
     elif not args.calibrate and (
         args.calib_batch is not None or args.calib_seq is not None
+        or args.calib_batches is not None
     ):
-        ap.error("--calib-batch/--calib-seq require --calibrate")
+        ap.error("--calib-batch/--calib-seq/--calib-batches require "
+                 "--calibrate")
+    if args.objective == "eval-loss":
+        if args.streaming:
+            ap.error("--objective eval-loss needs the full model in memory "
+                     "to splice candidates; it does not compose with "
+                     "--streaming")
+    elif args.eval_batches is not None or args.eval_seq is not None:
+        ap.error("--eval-batches/--eval-seq require --objective eval-loss")
+    if (args.calib_batches or 1) > 1 and (
+        args.calib_batch is not None or args.calib_seq is not None
+    ):
+        ap.error("--calib-batches > 1 draws default-shaped batches; it is "
+                 "mutually exclusive with --calib-batch/--calib-seq")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -373,9 +407,10 @@ def main() -> None:
     if args.budget_mb is not None:
         budget_bytes = int(args.budget_mb * 2**20)
         engine = args.engine or "greedy"
+        objective = args.objective.replace("-", "_")
         probe_tiles = 16 if args.probe_tiles is None else args.probe_tiles
         cal_inputs = None
-        if args.calibrate:
+        if args.calibrate and (args.calib_batch or args.calib_seq):
             from repro.compression.autotune import calibration_inputs
 
             cal_inputs = calibration_inputs(
@@ -386,8 +421,13 @@ def main() -> None:
         result = autotune_plan(
             values, policy, budget_bytes,
             key=jax.random.PRNGKey(args.seed),
-            engine=engine, cfg=cfg, calibration=args.calibrate,
+            engine=engine, objective=objective, cfg=cfg,
+            calibration=args.calibrate,
             calibration_inputs=cal_inputs,
+            calib_batches=args.calib_batches or 1,
+            eval_batches=args.eval_batches or 4,
+            eval_seq=args.eval_seq or 32,
+            eval_seed=args.seed,
             max_probe_tiles=probe_tiles or None,
             backend=args.backend, verbose=True,
         )
@@ -399,6 +439,21 @@ def main() -> None:
             f"{budget_bytes / 2**20:.2f} MiB "
             f"(solve {result.allocation.solve_s * 1e3:.1f} ms)"
         )
+        if result.metric_table is not None:
+            table = result.metric_table
+            print(
+                f"[eval] baseline loss {table.baseline.loss:.4f}, "
+                f"{len(table.exact_paths)} tensor(s) spliced exactly, "
+                f"surrogate skip rate {table.surrogate_skip_rate:.0%} "
+                f"(table {table.build_s:.1f}s)"
+            )
+        if result.lp_check is not None:
+            lp = result.lp_check
+            print(
+                f"[lp] {lp['status']}: gap {lp['relative_gap']:+.2%} "
+                f"({'within' if lp['within_tolerance'] else 'OVER'} "
+                f"{lp['tolerance']:.0%} tolerance)"
+            )
     else:
         plan = plan_compression(values, policy)
     print(plan.summary())

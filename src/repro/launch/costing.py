@@ -44,6 +44,7 @@ __all__ = [
     "cost_cell",
     "CellCosts",
     "compressed_weight_bytes",
+    "int8_weight_bytes",
     "dense_weight_bytes",
 ]
 
@@ -74,6 +75,16 @@ def compressed_weight_bytes(
     m_bytes = r * c * tile_n * ((K + 7) // 8)
     c_bytes = r * c * K * tile_d * int(itemsize)
     return int(groups) * (m_bytes + c_bytes)
+
+
+def int8_weight_bytes(
+    d_in: int, d_out: int, tile_n: int, tile_d: int, groups: int = 1,
+) -> int:
+    """Stored bytes of the int8-baseline {"q", "scale"} form — must agree
+    exactly with ``quantized.intquant_num_bytes`` on the executed result:
+    per tile, tile_n * tile_d int8 values plus one float32 scale."""
+    r, c = d_in // tile_n, d_out // tile_d
+    return int(groups) * (r * c * tile_n * tile_d + r * c * 4)
 
 
 class CellCosts(NamedTuple):

@@ -45,6 +45,8 @@ def apply_dense(x: jax.Array, p: dict) -> jax.Array:
     w = p["w"].value if isinstance(p["w"], Param) else p["w"]
     if quantized.is_compressed(w):
         y = quantized.apply_compressed(x, w)
+    elif quantized.is_intquant(w):
+        y = quantized.apply_intquant(x, w)
     else:
         y = x @ w
     if "b" in p:

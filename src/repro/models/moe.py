@@ -57,6 +57,8 @@ def _expert_linear(x: jax.Array, w) -> jax.Array:
     one is registered, the grouped two-einsum oracle otherwise."""
     if quantized.is_compressed(w):
         return quantized.apply_compressed(x, w)
+    if quantized.is_intquant(w):
+        return quantized.apply_intquant(x, w)
     return jnp.einsum("ebcd,edf->ebcf", x, w)
 
 

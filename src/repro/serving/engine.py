@@ -222,7 +222,29 @@ class Engine:
                     "engine": autotune.get("engine"),
                     "predicted_distortion": autotune.get("predicted_distortion"),
                     "calibrated": autotune.get("calibrated", False),
+                    # which objective allocated the bytes: "frobenius"
+                    # (weight-space distortion) or "eval_loss" (measured
+                    # eval-batch degradation, docs/eval.md)
+                    "objective": autotune.get("objective", "frobenius"),
                 }
+                ev = autotune.get("eval")
+                if ev:
+                    # eval-aware allocation provenance: enough to re-run
+                    # the exact harness this model was tuned against
+                    self.compression["autotune"]["eval"] = {
+                        "num_batches": ev.get("num_batches"),
+                        "batch": ev.get("batch"),
+                        "seq_len": ev.get("seq_len"),
+                        "seed": ev.get("seed"),
+                        "baseline_loss": ev.get("baseline_loss"),
+                        "surrogate_skip_rate": ev.get("surrogate_skip_rate"),
+                    }
+                lp = autotune.get("lp_check")
+                if lp:
+                    self.compression["autotune"]["lp_check"] = {
+                        "relative_gap": lp.get("relative_gap"),
+                        "within_tolerance": lp.get("within_tolerance"),
+                    }
 
         from repro.core import quantized
         from repro.kernels import ops

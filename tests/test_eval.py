@@ -1,0 +1,394 @@
+"""Task-metric evaluation subsystem: harness determinism and baseline
+caching, splice-path bit-exactness, metric-table reproducibility, the exact
+MCKP (LP) reference allocator vs greedy/QUBO, the int8 baseline column end
+to end, and the claim the subsystem exists for — at equal bytes, eval-loss
+allocation strictly beats Frobenius allocation on *measured* eval delta."""
+
+import itertools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compression as comp
+from repro.compression.autotune import (
+    BudgetInfeasibleError,
+    ProbeResult,
+    RDPoint,
+    allocate_budget,
+    autotune_plan,
+    probe_tensors,
+)
+from repro.compression.autotune.probe import TrialSplice
+from repro.compression.execute import _tensor_tiles
+from repro.compression.plan import tree_paths
+from repro.configs import get_config, reduced_for_smoke
+from repro.eval import (
+    EvalHarness,
+    build_metric_table,
+    clear_baseline_cache,
+    cross_check_lp,
+    solve_mckp,
+)
+from repro.eval.metric_table import spliced_leaf, splice_values
+from repro.models import init_model
+from repro.models.params import split
+
+
+def base_policy(**kw):
+    return comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096, **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    """Reduced qwen3 with deliberately misleading Frobenius norms: the MLP
+    gate/up projections are scaled tiny (their weight distortion looks
+    negligible, but they feed everything downstream) while the down
+    projection is scaled 4x (inflated weight distortion, ordinary
+    functional role).  A Frobenius allocator over-spends on down and
+    starves the others; the eval harness sees the true damage."""
+    cfg = reduced_for_smoke(get_config("qwen3-32b"))
+    values, _ = split(init_model(jax.random.PRNGKey(0), cfg))
+    mlp = values["groups"]["0"]["mlp"]
+    mlp["gate"]["w"] = mlp["gate"]["w"] * 1e-2
+    mlp["up"]["w"] = mlp["up"]["w"] * 1e-2
+    mlp["down"]["w"] = mlp["down"]["w"] * 4.0
+    return cfg, values
+
+
+# ---------------------------------------------------------------------------
+# harness: determinism, baseline cache, teacher-forced loss
+# ---------------------------------------------------------------------------
+
+
+def test_harness_batches_deterministic_and_baseline_cached(qwen):
+    cfg, values = qwen
+    clear_baseline_cache()
+    h1 = EvalHarness(cfg, num_batches=2, batch=2, seq_len=16, seed=3)
+    h2 = EvalHarness(cfg, num_batches=2, batch=2, seq_len=16, seed=3)
+    for b1, b2 in zip(h1.batches, h2.batches):
+        for k in b1:
+            np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+
+    r1 = h1.baseline(values)
+    r2 = h2.baseline(values)          # cache hit: same EvalResult object
+    assert r2 is r1
+    # token arch: the baseline is the reference's own predictive entropy
+    assert r1.loss > 0.0
+    # evaluating the reference against itself is a zero delta (KL = 0)
+    assert h1.evaluate(values).loss == pytest.approx(r1.loss, abs=1e-6)
+
+
+def test_harness_requires_baseline_before_evaluate(qwen):
+    cfg, values = qwen
+    h = EvalHarness(cfg, num_batches=1, batch=1, seq_len=8, seed=9)
+    with pytest.raises(RuntimeError, match="baseline"):
+        h.evaluate(values)
+
+
+# ---------------------------------------------------------------------------
+# splice path: bit-exact restore
+# ---------------------------------------------------------------------------
+
+
+def test_splice_restore_is_bit_identical(qwen):
+    cfg, values = qwen
+    plan = comp.plan_compression(values, base_policy())
+    leaves = dict(tree_paths(values))
+    t = plan.tensors[0]
+    leaf = leaves[t.path]
+    tiles = _tensor_tiles(leaf, t).astype(jnp.float32)
+
+    # wholesale splice of the original tiles reproduces the leaf bit-for-bit
+    whole = TrialSplice(indices=None, recon=tiles, resid2=0.0,
+                        num_tiles=t.num_tiles)
+    np.testing.assert_array_equal(
+        np.asarray(spliced_leaf(leaf, t, whole)), np.asarray(leaf)
+    )
+
+    # sampled-index splice of the original tiles is also a no-op
+    idx = jnp.array([0, 3, 7])
+    part = TrialSplice(indices=idx, recon=tiles[idx], resid2=0.0,
+                       num_tiles=t.num_tiles)
+    np.testing.assert_array_equal(
+        np.asarray(spliced_leaf(leaf, t, part)), np.asarray(leaf)
+    )
+
+    # splice_values replaces exactly one leaf and keeps the treedef
+    restored = splice_values(values, t.path, leaf)
+    for path, orig_leaf in tree_paths(values):
+        np.testing.assert_array_equal(
+            np.asarray(dict(tree_paths(restored))[path]), np.asarray(orig_leaf)
+        )
+    with pytest.raises(KeyError):
+        splice_values(values, "no/such/leaf", leaf)
+
+
+def test_probe_trials_splice_to_the_probed_residual(qwen):
+    """The spliced leaf's squared error vs the dense leaf must equal the
+    trial's recorded residual on the sampled tiles — the splice injects
+    exactly the damage the Frobenius curve measured, nothing else."""
+    cfg, values = qwen
+    plan = comp.plan_compression(values, base_policy())
+    probes, trials = probe_tensors(
+        values, plan, key=jax.random.PRNGKey(0), max_probe_tiles=4,
+        k_fractions=(0.5,), keep_trials=True,
+    )
+    leaves = dict(tree_paths(values))
+    planned = {t.path: t for t in plan.tensors}
+    checked = 0
+    for (path, tn, td, K, method), trial in sorted(trials.items()):
+        if method == "int8" or K == 0:
+            continue
+        import dataclasses
+        t = dataclasses.replace(
+            planned[path], tile_n=tn, tile_d=td, num_tiles=trial.num_tiles
+        )
+        spliced = spliced_leaf(leaves[path], t, trial)
+        err = float(jnp.sum(jnp.square(
+            spliced.astype(jnp.float32) - leaves[path].astype(jnp.float32)
+        )))
+        # resid2 is the full-tensor extrapolation; the splice only injects
+        # the sampled fraction of it
+        frac = (
+            1.0 if trial.indices is None
+            else int(trial.indices.shape[0]) / trial.num_tiles
+        )
+        assert err == pytest.approx(
+            float(trial.resid2) * frac, rel=1e-4, abs=1e-8
+        )
+        checked += 1
+    assert checked >= len(plan.tensors)
+
+
+# ---------------------------------------------------------------------------
+# metric table: reproducibility
+# ---------------------------------------------------------------------------
+
+
+def test_metric_table_same_seed_is_identical(qwen):
+    cfg, values = qwen
+    plan = comp.plan_compression(values, base_policy())
+    budget = int(0.6 * sum(t.pred_bytes for t in plan.tensors))
+
+    def build():
+        h = EvalHarness(cfg, num_batches=1, batch=2, seq_len=16, seed=0)
+        return build_metric_table(
+            values, plan, h, budget, key=jax.random.PRNGKey(7),
+            max_probe_tiles=4, k_fractions=(0.25, 0.5), include_int8=False,
+        )
+
+    t1, t2 = build(), build()
+    assert t1.to_json() == t2.to_json()
+    # the table covers every planned tensor and feeds the allocator
+    assert set(t1.entries) == {t.path for t in plan.tensors}
+    for p in t1.probes():
+        assert any(pt.dense for pt in p.points)
+        assert all(pt.distortion >= 0.0 for pt in p.points)
+    # exact rows are measured KL deltas: non-negative up to float noise
+    for rows in t1.entries.values():
+        for row in rows:
+            if row["exact"]:
+                assert row["delta"] >= -1e-4
+
+
+# ---------------------------------------------------------------------------
+# LP reference allocator
+# ---------------------------------------------------------------------------
+
+
+def _synth_probes(rng, n_tensors, n_points):
+    probes = []
+    for i in range(n_tensors):
+        k = rng.randint(2, n_points)
+        sizes = sorted(rng.sample(range(8, 400), k))
+        top = rng.uniform(5.0, 120.0)
+        dists = sorted((rng.uniform(0.0, top) for _ in range(k)), reverse=True)
+        points = tuple(
+            RDPoint(tile_n=8, tile_d=16, K=j + 1, bytes=b, distortion=d)
+            for j, (b, d) in enumerate(zip(sizes, dists))
+        )
+        probes.append(
+            ProbeResult(path=f"t{i}", orig_bytes=sizes[-1] + 64, weight=1.0,
+                        points=points)
+        )
+    return probes
+
+
+def _brute_force(probes, budget, groups=()):
+    """Exhaustive MCKP optimum over the same lower hulls every engine sees
+    (the hull restriction is part of the problem definition, not a solver
+    shortcut).  ``groups`` is (member_paths, cap) pairs, already resolved."""
+    from repro.compression.autotune import lower_hull
+
+    best = None
+    for combo in itertools.product(*[lower_hull(p.points) for p in probes]):
+        if sum(pt.bytes for pt in combo) > budget:
+            continue
+        if any(
+            sum(pt.bytes for p, pt in zip(probes, combo) if p.path in members)
+            > cap
+            for members, cap in groups
+        ):
+            continue
+        d = sum(pt.distortion for pt in combo)
+        if best is None or d < best - 1e-12:
+            best = d
+    return best
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_lp_solver_matches_brute_force(seed):
+    rng = random.Random(seed)
+    probes = _synth_probes(rng, rng.randint(2, 4), 4)
+    lo = sum(min(pt.bytes for pt in p.points) for p in probes)
+    hi = sum(max(pt.bytes for pt in p.points) for p in probes)
+    budget = rng.randint(lo, hi)
+    group_budgets = ()
+    bf_groups = ()
+    if seed % 2:
+        # cap the first two tensors' combined bytes just above their floor
+        cap = sum(min(pt.bytes for pt in p.points) for p in probes[:2])
+        cap += rng.randint(0, 200)
+        group_budgets = (("^t[01]$", cap),)
+        bf_groups = (({"t0", "t1"}, cap),)
+
+    choices, info = solve_mckp(probes, budget, group_budgets=group_budgets)
+    assert info["status"] == "optimal"
+    assert info["total_bytes"] <= budget
+    for members, cap in bf_groups:
+        spent = sum(
+            pt.bytes for path, pt in choices.items() if path in members
+        )
+        assert spent <= cap
+    expect = _brute_force(probes, budget, bf_groups)
+    assert info["total_distortion"] == pytest.approx(expect, rel=1e-9)
+
+
+@pytest.mark.parametrize("engine", ["greedy", "qubo"])
+def test_engines_stay_within_lp_tolerance_and_budget(engine):
+    rng = random.Random(42)
+    for trial in range(6):
+        probes = _synth_probes(rng, rng.randint(2, 5), 5)
+        lo = sum(min(pt.bytes for pt in p.points) for p in probes)
+        hi = sum(max(pt.bytes for pt in p.points) for p in probes)
+        budget = rng.randint(lo, hi)
+        alloc = allocate_budget(
+            probes, budget, engine=engine, key=jax.random.PRNGKey(trial),
+        )
+        assert alloc.total_bytes <= budget
+        check = cross_check_lp(probes, budget, alloc, tolerance=0.25)
+        assert check["status"] == "optimal"
+        assert check["relative_gap"] >= 0.0
+        assert check["within_tolerance"], check
+
+
+def test_lp_infeasible_budget_raises():
+    probes = _synth_probes(random.Random(0), 3, 3)
+    lo = sum(min(pt.bytes for pt in p.points) for p in probes)
+    with pytest.raises(BudgetInfeasibleError):
+        solve_mckp(probes, lo - 1)
+    with pytest.raises(BudgetInfeasibleError):
+        solve_mckp(probes, lo * 10, group_budgets=(("^t0$", 1),))
+
+
+# ---------------------------------------------------------------------------
+# int8 baseline column end to end
+# ---------------------------------------------------------------------------
+
+
+def test_int8_rule_plans_executes_and_serves(qwen):
+    cfg, values = qwen
+    policy = comp.CompressionPolicy(
+        method="int8", tile_n=16, tile_d=32, min_size=4096,
+    )
+    plan = comp.plan_compression(values, policy)
+    assert plan.tensors and all(t.method == "int8" for t in plan.tensors)
+    cvals, artifact = comp.execute_plan(plan, values, key=jax.random.PRNGKey(0))
+    leaves = dict(tree_paths(cvals))
+    for t in plan.tensors:
+        assert leaves[f"{t.path}/q"].dtype == jnp.int8
+        assert leaves[f"{t.path}/scale"].dtype == jnp.float32
+    # int8 at tile granularity is nearly lossless: forward stays close
+    from repro.models import forward
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    ref, _, _ = forward(values, {"tokens": toks}, cfg)
+    got, _, _ = forward(cvals, {"tokens": toks}, cfg)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=0.05, atol=0.05,
+    )
+
+
+def test_autotune_selects_int8_when_it_wins(qwen):
+    """With the int8 column enabled and a budget near the int8 rate, the
+    Frobenius allocator should prefer the (nearly lossless, fixed 4x)
+    baseline over matrix-compression points for at least one tensor."""
+    cfg, values = qwen
+    policy = base_policy()
+    plan = comp.plan_compression(values, policy)
+    leaves = dict(tree_paths(values))
+    dense = sum(
+        int(np.prod(t.shape)) * leaves[t.path].dtype.itemsize
+        for t in plan.tensors
+    )
+    result = autotune_plan(
+        values, policy, int(0.30 * dense), key=jax.random.PRNGKey(0),
+        objective="frobenius", int8_baseline=True, lp_check=True,
+        max_probe_tiles=4, k_fractions=(0.25, 0.5),
+    )
+    methods = {pt.method for pt in result.allocation.choices.values()}
+    assert "int8" in methods
+    assert result.lp_check["within_tolerance"], result.lp_check
+    # the refined plan executes and records the objective provenance
+    assert result.plan.autotune["objective"] == "frobenius"
+    assert result.plan.autotune["probe"]["int8_baseline"] is True
+    cvals, _ = comp.execute_plan(result.plan, values, key=jax.random.PRNGKey(0))
+    assert any(path.endswith("/q") for path, _ in tree_paths(cvals))
+
+
+# ---------------------------------------------------------------------------
+# the tentpole claim: eval-aware allocation beats Frobenius where they differ
+# ---------------------------------------------------------------------------
+
+
+def test_eval_objective_strictly_beats_frobenius_at_equal_bytes(qwen):
+    cfg, values = qwen
+    policy = base_policy()
+    plan = comp.plan_compression(values, policy)
+    budget = int(0.75 * sum(t.pred_bytes for t in plan.tensors))
+    common = dict(
+        key=jax.random.PRNGKey(0), cfg=cfg, int8_baseline=False,
+        max_probe_tiles=None, k_fractions=(0.25, 0.5, 0.75),
+        eval_batches=2, eval_seq=16,
+    )
+    frob = autotune_plan(
+        values, policy, budget, objective="frobenius", **common
+    )
+    ev = autotune_plan(
+        values, policy, budget, objective="eval_loss", **common
+    )
+    assert frob.allocation.total_bytes <= budget
+    assert ev.allocation.total_bytes <= budget
+    assert ev.lp_check is not None and ev.lp_check["within_tolerance"]
+    assert ev.plan.autotune["objective"] == "eval_loss"
+    assert ev.plan.autotune["eval"]["baseline_loss"] > 0.0
+
+    # measure both allocations for real: execute, then eval the compressed
+    # trees on the same harness the eval objective used
+    harness = EvalHarness(cfg, num_batches=2, batch=2, seq_len=16, seed=0)
+    baseline = harness.baseline(values)
+    deltas = {}
+    for name, res in (("frobenius", frob), ("eval_loss", ev)):
+        cvals, _ = comp.execute_plan(res.plan, values, key=jax.random.PRNGKey(0))
+        deltas[name] = harness.evaluate(cvals).loss - baseline.loss
+    assert deltas["eval_loss"] >= -1e-4            # KL: compression can't help
+    assert deltas["eval_loss"] < deltas["frobenius"], deltas
+    # the win must be real, not float noise
+    assert deltas["frobenius"] - deltas["eval_loss"] > 0.01, deltas

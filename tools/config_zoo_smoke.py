@@ -1,0 +1,127 @@
+"""Nightly config-zoo sweep: plan → execute → artifact roundtrip → serve
+parity across every frontend family in the zoo.
+
+The per-PR tier-1 lane exercises qwen3 and granite-moe deeply; this sweep
+keeps the *rest* of the architecture zoo honest on the full compression
+cycle without slowing the PR lane.  For each config it asserts, on the
+reduced-for-smoke shape:
+
+  1. the default smoke policy plans a non-empty tensor set,
+  2. ``execute_plan`` runs and the artifact survives a save/load
+     roundtrip (``validate_params`` clean against the compressed tree),
+  3. the compressed forward is argmax-identical between the einsum
+     serving path and the fused bitlinear kernels in Pallas interpret
+     mode, on a deterministic calibration batch drawn through the
+     arch's own frontend (token ids, frame embeddings or patch stubs).
+
+Covers the mamba2 (SSM), zamba2 (hybrid), internvl2 (VLM) and musicgen
+(audio) families — the four zoo archs with no dedicated tier-1 smoke.
+
+    PYTHONPATH=src python tools/config_zoo_smoke.py
+    PYTHONPATH=src python tools/config_zoo_smoke.py --archs mamba2-130m
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+ARCHS = ("mamba2-130m", "zamba2-1.2b", "internvl2-2b", "musicgen-medium")
+
+
+def run_arch(arch: str, *, batch: int = 2, seq_len: int = 16) -> dict:
+    from repro import compression as comp
+    from repro.compression.artifact import CompressionArtifact
+    from repro.compression.autotune import calibration_inputs
+    from repro.configs import get_config, reduced_for_smoke
+    from repro.kernels import ops
+    from repro.models import forward, init_model
+    from repro.models.params import split
+
+    cfg = reduced_for_smoke(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    vals, _ = split(init_model(key, cfg))
+
+    policy = comp.CompressionPolicy(
+        method="alternating", tile_n=16, tile_d=32, rank_ratio=0.5,
+        min_size=4096,
+    )
+    plan = comp.plan_compression(vals, policy)
+    if not plan.tensors:
+        raise AssertionError(f"{arch}: smoke policy planned no tensors")
+
+    cvals, artifact = comp.execute_plan(plan, vals, key=key)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        artifact.save(tmp)
+        loaded = CompressionArtifact.load(tmp)
+    if loaded.manifest["tensors"].keys() != artifact.manifest["tensors"].keys():
+        raise AssertionError(f"{arch}: artifact roundtrip changed tensor set")
+    problems = loaded.validate_params(cvals)
+    if problems:
+        raise AssertionError(f"{arch}: validate_params: {problems}")
+
+    inputs = calibration_inputs(cfg, batch=batch, seq_len=seq_len, key=key)
+    ops.disable_kernels()
+    try:
+        y_einsum, _, _ = forward(cvals, inputs, cfg)
+        ops.enable_kernels(interpret=True)
+        y_fused, _, _ = forward(cvals, inputs, cfg)
+    finally:
+        ops.disable_kernels()
+
+    a = np.asarray(y_einsum, np.float32)
+    b = np.asarray(y_fused, np.float32)
+    if a.shape != b.shape:
+        raise AssertionError(f"{arch}: logits shape {a.shape} != {b.shape}")
+    mismatch = int(np.sum(np.argmax(a, -1) != np.argmax(b, -1)))
+    if mismatch:
+        raise AssertionError(
+            f"{arch}: einsum-vs-fused argmax parity failed at "
+            f"{mismatch}/{a.shape[0] * a.shape[1]} positions "
+            f"(max |delta| {np.max(np.abs(a - b)):.3e})"
+        )
+    return {
+        "tensors": len(plan.tensors),
+        "compressed_bytes": sum(t.pred_bytes for t in plan.tensors),
+        "logits": list(a.shape),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--archs", nargs="+", default=list(ARCHS),
+                    help="configs to sweep (default: the nightly zoo set)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    failures = []
+    for arch in args.archs:
+        t0 = time.perf_counter()
+        try:
+            info = run_arch(arch, batch=args.batch, seq_len=args.seq_len)
+        except Exception as exc:  # noqa: BLE001 - sweep reports, then fails
+            failures.append((arch, exc))
+            print(f"[zoo] {arch}: FAIL ({exc})")
+            continue
+        print(
+            f"[zoo] {arch}: OK — {info['tensors']} tensors, "
+            f"{info['compressed_bytes'] / 1024:.0f} KiB compressed, "
+            f"logits {info['logits']}, parity clean "
+            f"({time.perf_counter() - t0:.1f}s)"
+        )
+    if failures:
+        print(f"[zoo] {len(failures)}/{len(args.archs)} archs failed")
+        return 1
+    print(f"[zoo] all {len(args.archs)} archs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
